@@ -1,0 +1,57 @@
+"""Shared benchmark scaffolding: scaled workload sizes + result IO.
+
+Workloads are scaled down from the paper's (4 GB files, 36 nodes, 43 GB
+models) to keep wall-time short; the virtual-time hardware model preserves
+the *ratios* the paper reports, which is what §Paper-fidelity checks."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import (BucketMount, ClientConfig, Cluster, ObjcacheClient,
+                        ObjcacheFS, ServerConfig)
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "bench")
+
+CHUNK = 1 << 20          # 1 MiB chunks (paper: 16 MiB; scaled 1/16)
+FILE_MB = 64             # Fig 9 file (paper: 4 GiB; scaled 1/64)
+
+
+def blob(n: int, seed: int = 0) -> bytes:
+    return bytes(np.random.default_rng(seed).integers(
+        0, 256, size=n, dtype=np.uint8))
+
+
+def make_cluster(workdir: str, n: int, chunk: int = CHUNK,
+                 bucket: str = "bench") -> Cluster:
+    cl = Cluster(workdir, [BucketMount(bucket, bucket)],
+                 cfg=ServerConfig(chunk_size=chunk))
+    cl.start(n)
+    return cl
+
+
+def make_fs(cl: Cluster, consistency: str = "weak",
+            deployment: str = "detached", node: str | None = None,
+            readahead: int = 8) -> ObjcacheFS:
+    client = ObjcacheClient(
+        cl.router, cl.clock, node or cl.node_list()[0],
+        ClientConfig(consistency=consistency, deployment=deployment,
+                     readahead_chunks=readahead),
+        chunk_size=cl.cfg.chunk_size)
+    return ObjcacheFS(client)
+
+
+def save_report(name: str, payload: dict) -> str:
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    path = os.path.join(REPORT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def mbps(nbytes: int, seconds: float) -> float:
+    return nbytes / max(seconds, 1e-9) / 1e6

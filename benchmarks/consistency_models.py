@@ -1,0 +1,122 @@
+"""Fig. 10: strict (read-after-write) vs weak (close-to-open) consistency ×
+embedded vs detached deployment — sequential/random write, sequential/random
+read, and write+fsync throughput while scaling cache servers.
+
+Paper claims: weak wins on writes (buffering/batching); strict wins on
+random reads (no client cache management); embedded generally beats detached
+(no local hop)."""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from .common import CHUNK, blob, make_cluster, make_fs, mbps, save_report
+
+FILE = 8 << 20           # 8 MiB per thread (paper: 1 GiB; scaled)
+BLOCK = 128 * 1024       # paper's FIO block size
+
+
+def _seq_write(fs, path, clock):
+    data = blob(FILE, 7)
+    t0 = clock.now
+    fh = fs.open(path, "w")
+    for off in range(0, FILE, BLOCK):
+        fs.write(fh, off, data[off:off + BLOCK])
+    fs.close(fh)
+    return mbps(FILE, clock.now - t0)
+
+
+def _rand_write(fs, path, clock):
+    data = blob(FILE, 8)
+    order = np.random.default_rng(1).permutation(FILE // BLOCK)
+    t0 = clock.now
+    fh = fs.open(path, "w")
+    for i in order:
+        off = int(i) * BLOCK
+        fs.write(fh, off, data[off:off + BLOCK])
+    fs.close(fh)
+    return mbps(FILE, clock.now - t0)
+
+
+def _seq_read(fs, path, clock):
+    t0 = clock.now
+    fh = fs.open(path, "r")
+    for off in range(0, FILE, BLOCK):
+        fs.read(fh, off, BLOCK)
+    fs.close(fh)
+    return mbps(FILE, clock.now - t0)
+
+
+def _rand_read(fs, path, clock):
+    order = np.random.default_rng(2).permutation(FILE // BLOCK)
+    t0 = clock.now
+    fh = fs.open(path, "r")
+    for i in order:
+        fs.read(fh, int(i) * BLOCK, BLOCK)
+    fs.close(fh)
+    return mbps(FILE, clock.now - t0)
+
+
+def _write_fsync(fs, path, clock):
+    data = blob(FILE, 9)
+    t0 = clock.now
+    fh = fs.open(path, "w")
+    for off in range(0, FILE, BLOCK):
+        fs.write(fh, off, data[off:off + BLOCK])
+    fs.fsync(fh)
+    fs.close(fh)
+    return mbps(FILE, clock.now - t0)
+
+
+def run(quiet: bool = False, nodes=(1, 2, 4, 8)) -> dict:
+    out: dict = {"nodes": list(nodes), "cells": {}}
+    for n in nodes:
+        for consistency in ("strict", "weak"):
+            for deployment in ("embedded", "detached"):
+                wd = tempfile.mkdtemp(prefix="bench-f10-")
+                try:
+                    cl = make_cluster(wd, n=n)
+                    # cold read targets (no cache fill)
+                    cl.cos.put_object("bench", "sr.bin", blob(FILE, 3))
+                    cl.cos.put_object("bench", "rr.bin", blob(FILE, 4))
+                    fs = make_fs(cl, consistency=consistency,
+                                 deployment=deployment)
+                    cell = {
+                        "seq_write": _seq_write(fs, "/bench/w.bin",
+                                                cl.clock),
+                        "rand_write": _rand_write(fs, "/bench/rw.bin",
+                                                  cl.clock),
+                        "seq_read": _seq_read(fs, "/bench/sr.bin",
+                                              cl.clock),
+                        "rand_read": _rand_read(fs, "/bench/rr.bin",
+                                                cl.clock),
+                        "write_fsync": _write_fsync(fs, "/bench/wf.bin",
+                                                    cl.clock),
+                    }
+                    out["cells"][f"{consistency}/{deployment}/n{n}"] = cell
+                    cl.close()
+                finally:
+                    shutil.rmtree(wd, ignore_errors=True)
+    # paper-trend checks at the largest size
+    n = nodes[-1]
+    sw = {c: out["cells"][f"{c}/detached/n{n}"]["seq_write"]
+          for c in ("strict", "weak")}
+    rr = {c: out["cells"][f"{c}/detached/n{n}"]["rand_read"]
+          for c in ("strict", "weak")}
+    out["trend_weak_write_faster"] = sw["weak"] > sw["strict"]
+    out["trend_strict_randread_not_slower"] = rr["strict"] >= rr["weak"] * 0.9
+    save_report("fig10_consistency_models", out)
+    if not quiet:
+        for k, v in out["cells"].items():
+            print(f"[fig10] {k:24s} " + "  ".join(
+                f"{m}={x:9.1f}MB/s" for m, x in v.items()))
+        print(f"[fig10] weak-write-faster={out['trend_weak_write_faster']} "
+              f"strict-randread-ok={out['trend_strict_randread_not_slower']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

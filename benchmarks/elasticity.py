@@ -1,0 +1,98 @@
+"""Figs. 13/14: elastic scaling times and migration volumes.
+
+Paper: 1→36 node scale-up then 36→0 scale-down, with 1024 dirty files (1–8
+MB, 4.6 GB total) under 32 directories vs without dirty files.  Claims:
+scale-up 2–14 s/node with dirty data (first additions slowest), scale-down
+2–6.8 s/node; ≤2 s and <1 s respectively when clean; zero-scale of the last
+node ~20 ms.  Scaled here: 12 nodes, 128 files of 64–512 KB under 8 dirs."""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from .common import blob, make_cluster, make_fs, save_report
+
+N_NODES = 12
+N_FILES = 128
+N_DIRS = 8
+
+
+def _write_dirty(cl, fs):
+    rng = np.random.default_rng(0)
+    for i in range(N_FILES):
+        sz = int(rng.integers(64, 512)) << 10
+        fs.write_file(f"/bench/d{i % N_DIRS}/f{i}.bin", blob(sz, i))
+
+
+def _mkdirs(fs):
+    for d in range(N_DIRS):
+        fs.makedirs(f"/bench/d{d}")
+
+
+def run(quiet: bool = False) -> dict:
+    rep: dict = {}
+    # ---- scale UP with dirty files ---------------------------------------
+    wd = tempfile.mkdtemp(prefix="bench-f13a-")
+    cl = make_cluster(wd, n=1)
+    fs = make_fs(cl)
+    _mkdirs(fs)
+    _write_dirty(cl, fs)
+    ups, migs = [], []
+    for _ in range(N_NODES - 1):
+        st = cl.add_node()
+        ups.append(st.duration)
+        migs.append({"metas": st.migrated_metas, "dirs": st.migrated_dirs,
+                     "chunks": st.migrated_chunks,
+                     "bytes": st.migrated_bytes})
+    rep["scale_up_dirty_s"] = ups
+    rep["migration_per_join"] = migs
+    # ---- scale DOWN with dirty files (write fresh dirty data first) ------
+    fs.client._pull_node_list()
+    _write_dirty(cl, fs)
+    downs = []
+    for nm in list(cl.node_list()):
+        st = cl.remove_node(nm)
+        downs.append(st.duration)
+    rep["scale_down_dirty_s"] = downs
+    rep["zero_scale_last_s"] = downs[-1]
+    cl.close()
+    shutil.rmtree(wd, ignore_errors=True)
+
+    # ---- scale UP/DOWN without dirty files --------------------------------
+    wd = tempfile.mkdtemp(prefix="bench-f13b-")
+    cl = make_cluster(wd, n=1)
+    ups_clean = [cl.add_node().duration for _ in range(N_NODES - 1)]
+    downs_clean = [cl.remove_node(nm).duration
+                   for nm in list(cl.node_list())]
+    rep["scale_up_clean_s"] = ups_clean
+    rep["scale_down_clean_s"] = downs_clean
+    cl.close()
+    shutil.rmtree(wd, ignore_errors=True)
+
+    rep["trend_first_join_slowest"] = ups[0] >= max(ups[1:]) * 0.8
+    rep["trend_clean_faster"] = (sum(ups_clean) < sum(ups)
+                                 and sum(downs_clean) < sum(downs))
+    save_report("fig13_14_elasticity", rep)
+    if not quiet:
+        print(f"[fig13] up-dirty   "
+              + " ".join(f"{u * 1000:6.0f}ms" for u in ups))
+        print(f"[fig13] down-dirty "
+              + " ".join(f"{d * 1000:6.0f}ms" for d in downs))
+        print(f"[fig13] up-clean   "
+              + " ".join(f"{u * 1000:6.0f}ms" for u in ups_clean))
+        print(f"[fig13] down-clean "
+              + " ".join(f"{d * 1000:6.0f}ms" for d in downs_clean))
+        m0 = migs[0]
+        print(f"[fig14] first join migrated: {m0['metas']} metas, "
+              f"{m0['dirs']} dirs, {m0['chunks']} chunks, "
+              f"{m0['bytes'] >> 20} MiB | first-join-slowest="
+              f"{rep['trend_first_join_slowest']} clean-faster="
+              f"{rep['trend_clean_faster']}")
+    return rep
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,161 @@
+"""Roofline analysis from the dry-run compiled artifacts (§Roofline).
+
+For every (arch × shape × mesh) record under a dry-run report dir:
+
+    compute term    = FLOPs/device            / 197 TFLOP/s (bf16, v5e)
+    memory term     = bytes_accessed/device   / 819 GB/s HBM
+    collective term = collective bytes/device / 50 GB/s ICI per link
+
+(cost_analysis and the parsed HLO are the per-device SPMD module, so terms
+are per-chip by construction.)
+
+XLA counts a while-loop body ONCE, so scanned models underreport: when a
+calibration record exists (repro.launch.calibrate two-point extrapolation),
+its corrected flops/bytes/collectives replace the scanned numbers.
+
+MODEL_FLOPS = 6·N·D for training (2·N·D fwd-only), N = active params, D =
+tokens processed; useful = MODEL_FLOPS / (HLO_FLOPs × chips) exposes
+remat/redundancy waste; roofline fraction = useful model FLOPs per
+chip-second at the dominant bound / peak.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dryrun-dir ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12       # bf16 per chip (TPU v5e)
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_BASE = os.path.join(os.path.dirname(__file__), "..", "reports")
+DRYRUN_DIR = os.path.join(_BASE, "dryrun")
+CAL_DIR = os.path.join(_BASE, "calibration")
+OUT_MD = os.path.join(_BASE, "roofline.md")
+OUT_JSON = os.path.join(_BASE, "roofline.json")
+
+
+def model_flops(rec: dict) -> float:
+    n = rec["params_active"]
+    if rec["kind"] == "train":
+        return 6.0 * n * rec["global_batch"] * rec["seq_len"]
+    if rec["kind"] == "prefill":
+        return 2.0 * n * rec["global_batch"] * rec["seq_len"]
+    return 2.0 * n * rec["global_batch"]      # decode: one token/request
+
+
+_SUGGEST = {
+    "compute": "compute-bound: wins come from cutting redundant FLOPs "
+               "(remat policy, fused attention) or faster kernels",
+    "memory": "cut HBM traffic: bigger fusion regions, bf16 activations, "
+              "remat policy, flash attention to avoid score "
+              "materialization",
+    "collective": "reshard to shrink all-gather/all-reduce volume: "
+                  "sequence-parallel residuals, grouped MoE dispatch, "
+                  "reduce-scatter gradients, overlap with compute",
+}
+
+
+def _load_calibration(cal_dir: str) -> dict:
+    out = {}
+    for path in glob.glob(os.path.join(cal_dir, "*.json")):
+        rec = json.load(open(path))
+        out[(rec["arch"], rec["shape"])] = rec["corrected"]
+    return out
+
+
+def analyse(rec: dict, cal: dict | None) -> dict:
+    pd = rec["per_device"]
+    flops = pd["flops"]
+    nbytes = pd["bytes_accessed"]
+    coll = pd["collective_bytes"]["total"]
+    calibrated = False
+    if cal is not None:
+        flops, nbytes = cal["flops"], cal["bytes"]
+        coll = cal["collective"]["total"]
+        calibrated = True
+    t_compute = flops / PEAK_FLOPS
+    t_memory = nbytes / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mf = model_flops(rec)
+    hlo_total = flops * rec["n_devices"]
+    useful = mf / hlo_total if hlo_total else 0.0
+    mfu_bound = (mf / rec["n_devices"]) / max(step_time, 1e-12) / PEAK_FLOPS
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"], "calibrated": calibrated,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": mfu_bound,
+        "temp_gib": pd["temp_bytes"] / 2**30,
+        "suggestion": _SUGGEST[dominant],
+    }
+
+
+def run(quiet: bool = False, mesh: str = "16x16",
+        dryrun_dir: str = DRYRUN_DIR, cal_dir: str = CAL_DIR,
+        out_md: str = OUT_MD, out_json: str = OUT_JSON,
+        title: str = "Roofline") -> list[dict]:
+    cals = _load_calibration(cal_dir) if os.path.isdir(cal_dir) else {}
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if mesh and rec["mesh"] != mesh:
+            continue
+        rows.append(analyse(rec, cals.get((rec["arch"], rec["shape"]))))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = [
+        f"# {title} (single-pod 16x16, per-chip terms; v5e: 197 TF bf16, "
+        "819 GB/s HBM, 50 GB/s ICI)",
+        "",
+        "| arch | shape | compute s | memory s | collective s | dominant |"
+        " useful | roofline frac | temp GiB | cal |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} "
+            f"| {r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} "
+            f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {r['temp_gib']:.1f} "
+            f"| {'y' if r['calibrated'] else 'n'} |")
+    os.makedirs(os.path.dirname(out_md), exist_ok=True)
+    with open(out_md, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=1)
+    if not quiet:
+        for r in rows:
+            print(f"[roofline] {r['arch']:18s} {r['shape']:12s} "
+                  f"dom={r['dominant']:10s} "
+                  f"frac={r['roofline_fraction']:7.3f} "
+                  f"useful={r['useful_ratio']:5.2f}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default=DRYRUN_DIR)
+    ap.add_argument("--cal-dir", default=CAL_DIR)
+    ap.add_argument("--out-md", default=OUT_MD)
+    ap.add_argument("--out-json", default=OUT_JSON)
+    ap.add_argument("--title", default="Roofline")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    run(dryrun_dir=args.dryrun_dir, cal_dir=args.cal_dir,
+        out_md=args.out_md, out_json=args.out_json, title=args.title,
+        mesh=args.mesh)
+
+
+if __name__ == "__main__":
+    main()

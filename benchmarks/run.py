@@ -1,0 +1,51 @@
+"""Benchmark harness: one benchmark per paper figure + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-roofline", action="store_true",
+                    help="skip reading the dry-run reports")
+    args = ap.parse_args()
+
+    from . import (consistency_models, elasticity, fio_seqread,
+                   serving_startup, training_io)
+
+    t0 = time.time()
+    print("== Fig 9: cache tiering (FIO sequential read) ==")
+    fio_seqread.run()
+    print("== Fig 10: consistency x deployment models ==")
+    consistency_models.run(nodes=(1, 2, 4, 8))
+    print("== Fig 11: model-serving startup ==")
+    serving_startup.run()
+    print("== Fig 12: training workload I/O ==")
+    training_io.run()
+    print("== Figs 13/14: elasticity + migration ==")
+    elasticity.run()
+    if not args.skip_roofline:
+        print("== Roofline (from dry-run artifacts) ==")
+        from . import roofline
+        rows = roofline.run(quiet=True)
+        if rows:
+            worst = min(rows, key=lambda r: r["roofline_fraction"])
+            print(f"[roofline] {len(rows)} cells analysed; worst fraction "
+                  f"{worst['roofline_fraction']:.3f} "
+                  f"({worst['arch']} x {worst['shape']}); "
+                  f"table at reports/roofline.md")
+        else:
+            print("[roofline] no dry-run reports found — run "
+                  "`python -m repro.launch.dryrun --all` first")
+    print(f"== all benchmarks done in {time.time() - t0:.1f}s ==")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

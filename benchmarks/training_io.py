@@ -1,0 +1,115 @@
+"""Fig. 12: training-workload storage I/O — model load + periodic
+checkpointing, S3FS vs objcache.
+
+Paper: T5-XXL fine-tune on 4 nodes; objcache cut model-load time 24% (four
+nodes deduplicate the download) and checkpoint time 274% (asynchronous
+write-back overlaps GPU compute; S3FS uploads synchronously at close)."""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+from repro.baselines import S3FSConfig, S3FSLike
+
+from .common import CHUNK, blob, make_cluster, make_fs, save_report
+
+MODEL_MB = 128          # paper: 42 GB; scaled
+CKPT_MB = 32            # per checkpoint
+N_NODES = 4
+N_ITERS = 16            # paper: 128 iterations
+CKPT_EVERY = 4          # paper: every 32
+ITER_S = 0.5            # virtual GPU compute per iteration
+
+
+def _run_objcache(wd):
+    cl = make_cluster(wd, n=N_NODES)
+    cl.cos.put_object("bench", "model.bin", blob(MODEL_MB << 20, 1))
+    # 4 workers (one per node) load the model in parallel — cluster cache
+    # deduplicates the COS download across nodes
+    t0 = cl.clock.now
+    ends = []
+    for i, node in enumerate(cl.node_list()):
+        fs = make_fs(cl, consistency="weak", node=node, readahead=64)
+        t_local0 = cl.clock.now
+        cl.clock.now = t0                 # workers start together
+        fs.read_file("/bench/model.bin")
+        ends.append(cl.clock.now)
+    cl.clock.advance_to(max(ends))
+    t_load = max(ends) - t0
+
+    fs = make_fs(cl, consistency="weak", readahead=16)
+    ckpt_blocked = 0.0
+    t_train0 = cl.clock.now
+    for it in range(N_ITERS):
+        cl.clock.sleep(ITER_S)            # GPU compute
+        if (it + 1) % CKPT_EVERY == 0:
+            t0 = cl.clock.now
+            fs.write_file(f"/bench/ckpt_{it}.bin", blob(CKPT_MB << 20, it))
+            ckpt_blocked += cl.clock.now - t0   # commit to cluster cache
+            cl.tick_flush(max_inodes=4)         # async upload (overlapped)
+    cl.drain_dirty()
+    total = cl.clock.now - t_train0
+    cl.close()
+    return t_load, ckpt_blocked, total
+
+
+def _run_s3fs(wd):
+    cl = make_cluster(wd, n=N_NODES)
+    cl.cos.put_object("bench", "model.bin", blob(MODEL_MB << 20, 1))
+    # every node pays its own download (no sharing)
+    t0 = cl.clock.now
+    ends = []
+    for i in range(N_NODES):
+        s3fs = S3FSLike(cl.cos, "bench", cl.clock, node=f"n{i}",
+                        cfg=S3FSConfig(chunk_size=CHUNK, parallel=64,
+                                       prefetch_bytes=MODEL_MB << 20))
+        cl.clock.now = t0
+        s3fs.read_file("model.bin")
+        ends.append(cl.clock.now)
+    cl.clock.advance_to(max(ends))
+    t_load = max(ends) - t0
+
+    s3fs = S3FSLike(cl.cos, "bench", cl.clock,
+                    cfg=S3FSConfig(chunk_size=CHUNK, parallel=64))
+    ckpt_blocked = 0.0
+    t_train0 = cl.clock.now
+    for it in range(N_ITERS):
+        cl.clock.sleep(ITER_S)
+        if (it + 1) % CKPT_EVERY == 0:
+            t0 = cl.clock.now
+            s3fs.write_file(f"ckpt_{it}.bin", blob(CKPT_MB << 20, it))
+            ckpt_blocked += cl.clock.now - t0   # synchronous upload at close
+    total = cl.clock.now - t_train0
+    cl.close()
+    return t_load, ckpt_blocked, total
+
+
+def run(quiet: bool = False) -> dict:
+    wd1 = tempfile.mkdtemp(prefix="bench-f12a-")
+    wd2 = tempfile.mkdtemp(prefix="bench-f12b-")
+    try:
+        oc_load, oc_ckpt, oc_total = _run_objcache(wd1)
+        s3_load, s3_ckpt, s3_total = _run_s3fs(wd2)
+        rep = {
+            "objcache": {"load_s": oc_load, "ckpt_blocked_s": oc_ckpt,
+                         "total_s": oc_total},
+            "s3fs": {"load_s": s3_load, "ckpt_blocked_s": s3_ckpt,
+                     "total_s": s3_total},
+            "load_speedup_pct": 100 * (s3_load / oc_load - 1),
+            "ckpt_speedup_pct": 100 * (s3_ckpt / max(oc_ckpt, 1e-9) - 1),
+        }
+        save_report("fig12_training_io", rep)
+        if not quiet:
+            print(f"[fig12] load: s3fs={s3_load:6.2f}s oc={oc_load:6.2f}s "
+                  f"(+{rep['load_speedup_pct']:.0f}%, paper +24%) | "
+                  f"ckpt-blocked: s3fs={s3_ckpt:6.2f}s oc={oc_ckpt:6.2f}s "
+                  f"(+{rep['ckpt_speedup_pct']:.0f}%, paper +274%)")
+        return rep
+    finally:
+        shutil.rmtree(wd1, ignore_errors=True)
+        shutil.rmtree(wd2, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,6 @@
+"""The paper's comparison points: S3FS-like wrapper FS and direct S3 copies."""
+
+from .s3fs import S3FSConfig, S3FSLike
+from .s3direct import S3Direct
+
+__all__ = ["S3Direct", "S3FSConfig", "S3FSLike"]

@@ -1,0 +1,245 @@
+"""S3FS-like baseline: a *node-local* wrapper FS over COS (§2.1, §6).
+
+Behavioural contract copied from s3fs-fuse as the paper configures it:
+
+* per-node page cache (Linux page cache) — nothing is shared between nodes
+  ("it cannot share downloaded files among nodes", §6.3);
+* chunked parallel GETs with prefetch (the paper uses 52 MB chunks and
+  20-way parallel multipart transfers, and 16 MB in §6.3);
+* write-through on close: `close()` uploads the whole file synchronously via
+  multipart upload ("S3FS synchronously uploaded files at every close",
+  §6.4) — there is no dirty state, no crash recovery, no sharding;
+* close-to-open consistency only.
+
+Timing is charged against the same simulated COS endpoint and node NIC
+resources the objcache cluster uses, so the comparison benchmarks (Figs.
+9–12) are apples-to-apples.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+from ..core.cos import CosStore
+from ..core.simclock import HardwareModel, Resource, SimClock
+from ..core.types import Errno, FSError
+
+
+@dataclass
+class S3FSConfig:
+    chunk_size: int = 52 * 1024 * 1024      # paper's FIO config
+    parallel: int = 20                       # multipart parallelism
+    prefetch_bytes: int = 1 << 30            # 1 GB prefetch window
+    page_cache_bytes: int = 4 << 30
+    use_page_cache: bool = True
+
+
+@dataclass
+class _OpenFile:
+    path: str
+    writable: bool
+    data: bytearray = field(default_factory=bytearray)
+    dirty: bool = False
+    size: int = 0
+
+
+class S3FSLike:
+    """One instance per node (no cross-node state, exactly like s3fs)."""
+
+    def __init__(self, cos: CosStore, bucket: str, clock: SimClock,
+                 hw: HardwareModel | None = None,
+                 cfg: S3FSConfig | None = None, node: str = "s3fs") -> None:
+        self.cos = cos
+        self.bucket = bucket
+        self.clock = clock
+        self.hw = hw or HardwareModel()
+        self.cfg = cfg or S3FSConfig()
+        self.nic = self.hw.make_nic(f"{node}-s3fs")
+        # page cache: key -> (chunk_idx -> (bytes, ready_t))
+        self._pages: OrderedDict[tuple[str, int], tuple[bytes, float]] = \
+            OrderedDict()
+        self._pages_bytes = 0
+        self._fh = itertools.count(3)
+        self._open: dict[int, _OpenFile] = {}
+        self.stats: dict[str, int] = {}
+
+    def _bump(self, k: str, n: int = 1) -> None:
+        self.stats[k] = self.stats.get(k, 0) + n
+
+    # ---- page cache -----------------------------------------------------------
+    def _cache_put(self, key: str, idx: int, data: bytes, t: float) -> None:
+        if not self.cfg.use_page_cache:
+            return
+        k = (key, idx)
+        old = self._pages.pop(k, None)
+        if old:
+            self._pages_bytes -= len(old[0])
+        self._pages[k] = (data, t)
+        self._pages_bytes += len(data)
+        while self._pages_bytes > self.cfg.page_cache_bytes and self._pages:
+            _, (d, _) = self._pages.popitem(last=False)
+            self._pages_bytes -= len(d)
+
+    def _cache_get(self, key: str, idx: int) -> tuple[bytes, float] | None:
+        ent = self._pages.get((key, idx))
+        if ent is not None:
+            self._pages.move_to_end((key, idx))
+            self._bump("page_hits")
+        return ent
+
+    def invalidate(self, key: str) -> None:
+        for k in [k for k in self._pages if k[0] == key]:
+            d, _ = self._pages.pop(k)
+            self._pages_bytes -= len(d)
+
+    # ---- namespace -------------------------------------------------------------
+    def listdir(self, prefix: str) -> list[str]:
+        prefix = prefix.strip("/")
+        pfx = prefix + "/" if prefix else ""
+        objs, prefixes, t = self.cos.list_prefix(self.bucket, pfx,
+                                                 start=self.clock.now)
+        self.clock.advance_to(t)
+        names = [k[len(pfx):] for k, _ in objs if k != pfx]
+        names += [p[len(pfx):].rstrip("/") for p in prefixes]
+        return sorted(n for n in names if n)
+
+    def stat(self, path: str) -> dict:
+        key = path.strip("/")
+        try:
+            size, t = self.cos.head_object(self.bucket, key,
+                                           start=self.clock.now)
+        except Exception:
+            raise FSError(Errno.ENOENT, path) from None
+        self.clock.advance_to(t)
+        return {"size": size}
+
+    def exists(self, path: str) -> bool:
+        return self.cos.exists(self.bucket, path.strip("/"))
+
+    def unlink(self, path: str) -> None:
+        t = self.cos.delete_object(self.bucket, path.strip("/"),
+                                   start=self.clock.now)
+        self.clock.advance_to(t)
+        self.invalidate(path.strip("/"))
+
+    # ---- data ------------------------------------------------------------------
+    def open(self, path: str, mode: str = "r") -> int:
+        key = path.strip("/")
+        f = _OpenFile(path=key, writable=any(m in mode for m in "wa+"))
+        if "w" not in mode:
+            try:
+                size, t = self.cos.head_object(self.bucket, key,
+                                               start=self.clock.now)
+                self.clock.advance_to(t)
+                f.size = size
+            except Exception:
+                if not f.writable:
+                    raise FSError(Errno.ENOENT, path) from None
+        fh = next(self._fh)
+        self._open[fh] = f
+        return fh
+
+    def read(self, fh: int, off: int, length: int) -> bytes:
+        f = self._open[fh]
+        length = max(0, min(length, f.size - off))
+        if length == 0:
+            return b""
+        cs = self.cfg.chunk_size
+        first, last = off // cs, (off + length - 1) // cs
+        # prefetch window (sequential assumption, like s3fs readahead)
+        pre_last = min((off + self.cfg.prefetch_bytes - 1) // cs,
+                       (f.size - 1) // cs)
+        t0 = self.clock.now
+        ready: dict[int, float] = {}
+        chunks: dict[int, bytes] = {}
+        lane = Resource("s3fs-par", float("inf"), 0.0, self.cfg.parallel)
+        for idx in range(first, pre_last + 1):
+            ent = self._cache_get(f.path, idx)
+            if ent is not None:
+                chunks[idx], ready[idx] = ent
+                continue
+            o = idx * cs
+            n = min(cs, f.size - o)
+            begin = lane.acquire(t0, 0)
+            data, te = self.cos.get_object(self.bucket, f.path, rng=(o, n),
+                                           start=begin)
+            self._bump("cos_get")
+            chunks[idx] = data
+            ready[idx] = te
+            self._cache_put(f.path, idx, data, te)
+        need_end = max(ready[i] for i in range(first, last + 1))
+        self.clock.advance_to(need_end)
+        out = bytearray()
+        for idx in range(first, last + 1):
+            data = chunks[idx]
+            s = max(off, idx * cs) - idx * cs
+            e = min(off + length, (idx + 1) * cs) - idx * cs
+            out += data[s:e]
+        self._bump("read_bytes", len(out))
+        return bytes(out)
+
+    def write(self, fh: int, off: int, data: bytes) -> int:
+        """Buffered locally; upload happens at close/fsync (write-through on
+        close).  s3fs materializes the whole object locally to modify it."""
+        f = self._open[fh]
+        if not f.writable:
+            raise FSError(Errno.EINVAL, "read-only handle")
+        if not f.data and f.size and off != 0:
+            # partial update forces a full download first (no partial PUT
+            # on S3 — the paper's LPCC critique, §1)
+            full = self.read(fh, 0, f.size)
+            f.data = bytearray(full)
+        if len(f.data) < off + len(data):
+            f.data.extend(b"\0" * (off + len(data) - len(f.data)))
+        f.data[off:off + len(data)] = data
+        f.size = max(f.size, off + len(data))
+        f.dirty = True
+        self._bump("write_bytes", len(data))
+        return len(data)
+
+    def _upload(self, f: _OpenFile) -> None:
+        cs = self.cfg.chunk_size
+        data = bytes(f.data)
+        t0 = self.clock.now
+        if len(data) <= cs:
+            t = self.cos.put_object(self.bucket, f.path, data, start=t0)
+            self.clock.advance_to(t)
+        else:
+            uid, t = self.cos.mpu_begin(self.bucket, f.path, start=t0)
+            lane = Resource("s3fs-up", float("inf"), 0.0, self.cfg.parallel)
+            ends = []
+            for part, o in enumerate(range(0, len(data), cs), start=1):
+                begin = lane.acquire(t, 0)
+                ends.append(self.cos.mpu_add(uid, part, data[o:o + cs],
+                                             start=begin))
+            t = self.cos.mpu_commit(uid, start=max(ends))
+            self.clock.advance_to(t)
+        self._bump("uploads")
+        self.invalidate(f.path)
+        f.dirty = False
+
+    def fsync(self, fh: int) -> None:
+        f = self._open[fh]
+        if f.dirty:
+            self._upload(f)
+
+    def close(self, fh: int) -> None:
+        f = self._open.pop(fh, None)
+        if f is not None and f.dirty:
+            self._upload(f)  # synchronous upload at every close (§6.4)
+
+    # ---- convenience ------------------------------------------------------------
+    def write_file(self, path: str, data: bytes) -> None:
+        fh = self.open(path, "w")
+        self.write(fh, 0, data)
+        self.close(fh)
+
+    def read_file(self, path: str) -> bytes:
+        fh = self.open(path, "r")
+        try:
+            f = self._open[fh]
+            return self.read(fh, 0, f.size)
+        finally:
+            self.close(fh)

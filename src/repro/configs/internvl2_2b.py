@@ -1,0 +1,18 @@
+"""internvl2-2b [vlm] — 24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92553 (padded to 92672 = 724*128 for 16-way TP; padding ids are never
+targeted); InternViT patch frontend is a STUB — input_specs() provides
+precomputed patch embeddings (B, 256, 1024).  [arXiv:2404.16821; hf]"""
+
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-2b", family="vlm",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8,
+    d_ff=8192, vocab=92672, rope_theta=1e6,
+    frontend="patch", n_frontend_tokens=256,
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                        d_ff=128, vocab=512, n_frontend_tokens=8)

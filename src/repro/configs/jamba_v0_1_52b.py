@@ -1,0 +1,24 @@
+"""jamba-v0.1-52b [hybrid] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536; Mamba+attention 1:7 interleave (attention at slot 4 of every
+8-layer period), MoE 16 experts top-2 every other layer.
+[arXiv:2403.19887; hf]"""
+
+from ..models.config import ArchConfig, MoEConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=65536, rope_theta=1e4,
+    attn_period=8, attn_offset=4,
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=14336, every=2),
+    ssm=SSMConfig(d_state=16, head_dim=64, expand=2, d_conv=4, chunk=128),
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+                        d_ff=128, vocab=512, attn_period=4, attn_offset=2,
+                        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64,
+                                      every=2),
+                        ssm=SSMConfig(d_state=16, head_dim=16, expand=2,
+                                      d_conv=4, chunk=32))

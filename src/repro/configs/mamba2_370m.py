@@ -1,0 +1,18 @@
+"""mamba2-370m [ssm] — 48L d_model=1024, attention-free, vocab=50280
+(padded to 50304 = 393*128), ssm_state=128, SSD (state-space duality).
+[arXiv:2405.21060; unverified]"""
+
+from ..models.config import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-370m", family="ssm",
+    n_layers=48, d_model=1024, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab=50304, tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, d_conv=4, chunk=128),
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, d_model=64,
+                        ssm=SSMConfig(d_state=16, head_dim=16, expand=2,
+                                      d_conv=4, chunk=32))

@@ -1,0 +1,18 @@
+"""olmoe-1b-7b [moe] — 16L d_model=2048 16H (GQA kv=16) d_ff=1024
+vocab=50304; 64 routed experts top-8, qk-norm.  [arXiv:2409.02060; hf]"""
+
+from ..models.config import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="olmoe-1b-7b", family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1024, vocab=50304, qk_norm=True, rope_theta=1e4,
+    moe=MoEConfig(n_experts=64, top_k=8, d_ff_expert=1024, every=1),
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                        d_ff=128, vocab=512,
+                        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32,
+                                      every=1))

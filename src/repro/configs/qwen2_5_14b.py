@@ -1,0 +1,16 @@
+"""qwen2.5-14b [dense] — 48L d_model=5120 40H (GQA kv=8) d_ff=13824
+vocab=152064; GQA with QKV bias.  [hf:Qwen/Qwen2.5-14B per brief; hf]"""
+
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-14b", family="dense",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=13824, vocab=152064, head_dim=128,
+    qkv_bias=True, rope_theta=1e6,
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                        d_ff=160, vocab=512, head_dim=16)

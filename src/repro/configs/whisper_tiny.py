@@ -1,0 +1,21 @@
+"""whisper-tiny [audio] — 4L encoder + 4L decoder, d_model=384 6H (kv=6)
+d_ff=1536 vocab=51865 (padded to 51968 = 406*128); enc-dec with a STUB conv
+frontend — input_specs() provides precomputed frame embeddings (B, 1500,
+384).  Decoder positions are learned; the table is sized per shape
+(max(448, seq)).  [arXiv:2212.04356; unverified]"""
+
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny", family="audio",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab=51968, tie_embeddings=True,
+    enc_layers=4, enc_seq=1500, max_decoder_positions=448,
+    frontend="audio", n_frontend_tokens=1500,
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, enc_layers=2, d_model=64, n_heads=4,
+                        n_kv_heads=4, d_ff=128, vocab=512, enc_seq=32,
+                        n_frontend_tokens=32)

@@ -1,0 +1,29 @@
+"""objcache core: elastic transactional cache filesystem over external storage.
+
+Public surface::
+
+    from repro.core import (Cluster, BucketMount, ObjcacheClient, ObjcacheFS,
+                            ClientConfig, ServerConfig, CosStore, SimClock,
+                            HardwareModel)
+"""
+
+from .client import ClientConfig, ObjcacheClient
+from .cluster import Cluster, ScaleStats
+from .cos import CosError, CosStore
+from .fs import ObjcacheFS
+from .hashring import HashRing
+from .net import Router, SimCrash, SimTimeout
+from .raftlog import ChecksumError, RaftLog
+from .server import BucketMount, CacheServer, ServerConfig
+from .simclock import HardwareModel, Resource, SimClock
+from .types import (CHUNK_SIZE_DEFAULT, Cmd, Errno, FSError, InodeKind,
+                    InodeMeta, ROOT_INODE, TxId)
+
+__all__ = [
+    "BucketMount", "CHUNK_SIZE_DEFAULT", "CacheServer", "ChecksumError",
+    "ClientConfig", "Cluster", "Cmd", "CosError", "CosStore", "Errno",
+    "FSError", "HardwareModel", "HashRing", "InodeKind", "InodeMeta",
+    "ObjcacheClient", "ObjcacheFS", "ROOT_INODE", "Resource", "Router",
+    "RaftLog", "ScaleStats", "ServerConfig", "SimClock", "SimCrash",
+    "SimTimeout", "TxId",
+]

@@ -1,0 +1,441 @@
+"""Node-local cache client — the paper's FUSE-process role (§3.2–3.3, §5).
+
+One `ObjcacheClient` runs on a node (colocated with that node's cache server)
+and implements the node-local cache tier:
+
+* **consistency models** (§3.3): `strict` (read-after-write) disables client
+  buffering and the page cache — every write commits to cluster-local cache
+  before returning, every read consults the cluster; `weak` (close-to-open)
+  buffers writes up to 128 KB (the Linux-FUSE limit the paper observed),
+  keeps a node-local page cache of chunks, and validates once at open().
+* **deployment models** (§3.1): `embedded` colocates client and server in one
+  process (no hop to the local server); `detached` pays a loopback hop.
+* **node-list versioning** (§4.3): every request carries the client's copy of
+  the node-list version; ESTALE answers trigger a pull + retry.
+* **TxId discipline** (§4.5): one SeqNum per file operation, *reused on
+  retries*, so coordinator/participant dedup makes retries idempotent.
+
+The client computes object placement itself with the same consistent-hash
+ring the servers use, and sends each operation to the metadata owner as the
+transaction coordinator (§4.4).
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+from .hashring import HashRing
+from .net import Router, SimCrash, SimTimeout
+from .simclock import SimClock
+from .types import (Errno, FSError, InodeKind, ROOT_INODE, chunk_key,
+                    meta_key)
+
+_client_ids = itertools.count(1)
+
+
+@dataclass
+class ClientConfig:
+    consistency: str = "weak"          # "strict" | "weak"  (§3.3)
+    deployment: str = "detached"       # "detached" | "embedded"  (§3.1)
+    page_cache_bytes: int = 1 << 30
+    write_buffer_bytes: int = 128 * 1024   # §6.2: Linux allowed up to 128 KB
+    readahead_chunks: int = 4          # chunks prefetched ahead on seq reads
+    max_retries: int = 4
+
+
+@dataclass
+class _Handle:
+    fh: int
+    ino: int
+    path: str
+    writable: bool
+    # weak-mode write buffer: list of (off, bytes), coalesced at flush
+    buffer: list[tuple[int, bytes]] = field(default_factory=list)
+    buffered_bytes: int = 0
+    # handle-local stream cache for strict mode: {chunk_off: (bytes,
+    # ready_t, meta_version)} — strict reads getattr() first, so entries are
+    # only served when the inode version is unchanged (read-after-write)
+    stream_cache: dict[int, tuple[bytes, float, int]] = \
+        field(default_factory=dict)
+    last_read_end: int = -1
+    size_hint: int = 0
+    appending_new: bool = False    # created this open; size grows monotonically
+
+
+class ObjcacheClient:
+    def __init__(self, router: Router, clock: SimClock, local_node: str,
+                 cfg: ClientConfig | None = None,
+                 chunk_size: int = 16 * 1024 * 1024) -> None:
+        self.router = router
+        self.clock = clock
+        self.local_node = local_node
+        self.cfg = cfg or ClientConfig()
+        self.chunk_size = chunk_size
+        self.client_id = next(_client_ids)
+        self._seq = 0
+        self.node_list: list[str] = []
+        self.nl_version = 0
+        self.ring = HashRing()
+        self._fh = itertools.count(3)
+        self.handles: dict[int, _Handle] = {}
+        # node-local page cache: (ino, chunk_off) -> (bytes, ready_t, version)
+        self._pages: OrderedDict[tuple[int, int], tuple[bytes, float, int]] = \
+            OrderedDict()
+        self._pages_bytes = 0
+        # dentry cache (weak mode only): (parent, name) -> ino
+        self._dentries: dict[tuple[int, str], int] = {}
+        # attr cache (weak mode, validated at open): ino -> meta payload
+        self._attrs: dict[int, dict] = {}
+        self.stats: dict[str, int] = {}
+        self._pull_node_list()
+
+    # =====================================================================
+    # plumbing
+    # =====================================================================
+    def _bump(self, k: str, n: int = 1) -> None:
+        self.stats[k] = self.stats.get(k, 0) + n
+
+    def next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def _is_embedded(self, dst: str) -> bool:
+        return self.cfg.deployment == "embedded" and dst == self.local_node
+
+    def _pull_node_list(self) -> None:
+        for dst in (list(self.ring.nodes()) or list(self.router.servers)):
+            try:
+                res, t = self.router.rpc(self.local_node, dst, "rpc_nodelist",
+                                         self.clock.now,
+                                         embedded_local=self._is_embedded(dst))
+                self.clock.advance_to(t)
+                self.node_list = res["nodes"]
+                self.nl_version = res["version"]
+                self.ring = HashRing(self.node_list)
+                return
+            except (SimTimeout, SimCrash):
+                continue
+        raise FSError(Errno.ETIMEDOUT, "no reachable server for node list")
+
+    def _rpc(self, dst: str, method: str, *, nbytes_out: int = 256,
+             nbytes_in: int = 256, **kw):
+        """RPC with ESTALE pull-and-retry and timeout retries (same TxId)."""
+        last: Exception | None = None
+        for _ in range(self.cfg.max_retries):
+            try:
+                res, t = self.router.rpc(
+                    self.local_node, dst, method, self.clock.now,
+                    nbytes_out=nbytes_out, nbytes_in=nbytes_in,
+                    embedded_local=self._is_embedded(dst), **kw)
+                self.clock.advance_to(t)
+                return res
+            except FSError as e:
+                if e.errno == Errno.ESTALE:
+                    self._pull_node_list()
+                    if "nl_version" in kw:
+                        kw["nl_version"] = self.nl_version
+                    dst = self._redirect(dst, method, kw)
+                    last = e
+                    continue
+                if e.errno == Errno.ECONFLICT:
+                    # racy lock conflict: back off and retry, same TxId
+                    self.clock.sleep(0.001)
+                    last = e
+                    continue
+                raise
+            except (SimTimeout, SimCrash) as e:
+                self.clock.sleep(self.router.timeout_s)
+                self._pull_node_list()
+                dst = self._redirect(dst, method, kw)
+                last = e
+        if isinstance(last, FSError):
+            raise last
+        raise FSError(Errno.ETIMEDOUT, f"{method} to {dst}: retries exhausted")
+
+    def _redirect(self, dst: str, method: str, kw: dict) -> str:
+        """After a node-list change, recompute the destination owner."""
+        if "ino" in kw:
+            return self.ring.node_for(meta_key(kw["ino"]))
+        if "parent" in kw:
+            return self.ring.node_for(meta_key(kw["parent"]))
+        if dst in self.ring.nodes():
+            return dst
+        return self.ring.nodes()[0]
+
+    # =====================================================================
+    # page cache (weak mode node-local tier)
+    # =====================================================================
+    def _page_get(self, ino: int, coff: int, version: int | None
+                  ) -> tuple[bytes, float] | None:
+        """Returns (data, ready_t).  NO clock side effects: in-flight
+        readahead entries must not stall a read that does not need them —
+        the caller charges ready_t only for chunks it returns."""
+        ent = self._pages.get((ino, coff))
+        if ent is None:
+            return None
+        data, ready_t, ver = ent
+        if version is not None and ver != version:
+            return None
+        self._pages.move_to_end((ino, coff))
+        self._bump("page_hits")
+        return data, ready_t
+
+    def _page_put(self, ino: int, coff: int, data: bytes, ready_t: float,
+                  version: int) -> None:
+        key = (ino, coff)
+        old = self._pages.pop(key, None)
+        if old is not None:
+            self._pages_bytes -= len(old[0])
+        self._pages[key] = (data, ready_t, version)
+        self._pages_bytes += len(data)
+        while self._pages_bytes > self.cfg.page_cache_bytes and self._pages:
+            _, (d, _, _) = self._pages.popitem(last=False)
+            self._pages_bytes -= len(d)
+
+    def invalidate_ino(self, ino: int) -> None:
+        for key in [k for k in self._pages if k[0] == ino]:
+            d, _, _ = self._pages.pop(key)
+            self._pages_bytes -= len(d)
+        self._attrs.pop(ino, None)
+
+    # =====================================================================
+    # namespace operations
+    # =====================================================================
+    def getattr(self, ino: int, *, cached_ok: bool = False) -> dict:
+        if cached_ok and self.cfg.consistency == "weak" and ino in self._attrs:
+            self._bump("attr_hits")
+            return self._attrs[ino]
+        owner = self.ring.node_for(meta_key(ino))
+        res = self._rpc(owner, "rpc_getattr", ino=ino,
+                        nl_version=self.nl_version)
+        if self.cfg.consistency == "weak":
+            self._attrs[ino] = res
+        return res
+
+    def lookup(self, parent: int, name: str) -> int:
+        if self.cfg.consistency == "weak":
+            hit = self._dentries.get((parent, name))
+            if hit is not None:
+                return hit
+        owner = self.ring.node_for(meta_key(parent))
+        try:
+            res = self._rpc(owner, "rpc_lookup", parent=parent, name=name,
+                            nl_version=self.nl_version)
+        except FSError as e:
+            if e.errno != Errno.ENOENT:
+                raise
+            # §3.2: retrieve the namespace lazily from external storage
+            loaded = self._ensure_dir_loaded(parent)
+            if not loaded:
+                raise
+            res = self._rpc(owner, "rpc_lookup", parent=parent, name=name,
+                            nl_version=self.nl_version)
+        ino = res["ino"]
+        if self.cfg.consistency == "weak":
+            self._dentries[(parent, name)] = ino
+        return ino
+
+    def _ensure_dir_loaded(self, ino: int) -> bool:
+        """Returns True if a COS listing was (or had been) applied."""
+        owner = self.ring.node_for(meta_key(ino))
+        res = self._rpc(owner, "rpc_readdir", ino=ino,
+                        nl_version=self.nl_version)
+        if res["loaded"]:
+            return True
+        self._rpc(owner, "coord_load_dir", ino=ino,
+                  client_id=self.client_id, seq=self.next_seq(),
+                  nl_version=self.nl_version)
+        self._bump("dir_loads")
+        return True
+
+    def readdir(self, ino: int) -> dict[str, int]:
+        self._ensure_dir_loaded(ino)
+        owner = self.ring.node_for(meta_key(ino))
+        res = self._rpc(owner, "rpc_readdir", ino=ino,
+                        nl_version=self.nl_version)
+        return res["children"]
+
+    def create(self, parent: int, name: str, kind: InodeKind,
+               cos_bucket: str | None, cos_key: str | None) -> int:
+        owner = self.ring.node_for(meta_key(parent))
+        res = self._rpc(owner, "coord_create", client_id=self.client_id,
+                        seq=self.next_seq(), parent=parent, name=name,
+                        kind=int(kind), cos_bucket=cos_bucket,
+                        cos_key=cos_key, mtime=self.clock.now,
+                        nl_version=self.nl_version)
+        if self.cfg.consistency == "weak":
+            self._dentries[(parent, name)] = res["ino"]
+        return res["ino"]
+
+    def unlink(self, parent: int, name: str, ino: int) -> None:
+        owner = self.ring.node_for(meta_key(ino))
+        self._rpc(owner, "coord_unlink", client_id=self.client_id,
+                  seq=self.next_seq(), parent=parent, name=name, ino=ino,
+                  nl_version=self.nl_version)
+        self._dentries.pop((parent, name), None)
+        self.invalidate_ino(ino)
+
+    def rename(self, src_parent: int, src_name: str, dst_parent: int,
+               dst_name: str, ino: int, new_cos_key: str | None) -> None:
+        owner = self.ring.node_for(meta_key(ino))
+        self._rpc(owner, "coord_rename", client_id=self.client_id,
+                  seq=self.next_seq(), src_parent=src_parent,
+                  src_name=src_name, dst_parent=dst_parent,
+                  dst_name=dst_name, ino=ino, new_cos_key=new_cos_key,
+                  nl_version=self.nl_version)
+        self._dentries.pop((src_parent, src_name), None)
+        if self.cfg.consistency == "weak":
+            self._dentries[(dst_parent, dst_name)] = ino
+        self._attrs.pop(ino, None)
+
+    def truncate(self, ino: int, new_size: int) -> None:
+        owner = self.ring.node_for(meta_key(ino))
+        self._rpc(owner, "coord_truncate", client_id=self.client_id,
+                  seq=self.next_seq(), ino=ino, new_size=new_size,
+                  mtime=self.clock.now, nl_version=self.nl_version)
+        self.invalidate_ino(ino)
+
+    # =====================================================================
+    # data path
+    # =====================================================================
+    def _chunks_spanned(self, off: int, length: int) -> list[int]:
+        cs = self.chunk_size
+        first = (off // cs) * cs
+        last = ((off + max(length, 1) - 1) // cs) * cs
+        return list(range(first, last + cs, cs))
+
+    def write_chunks(self, ino: int, off: int, data: bytes, seq: int
+                     ) -> list[tuple[int, list[str]]]:
+        """§5.3: transfer chunk updates directly to participants, outside any
+        metadata lock.  Returns [(chunk_off, [stage_ids])] for the flush."""
+        cs = self.chunk_size
+        staged: dict[int, list[str]] = {}
+        pos = 0
+        part = 0
+        ends = []
+        t0 = self.clock.now
+        while pos < len(data):
+            abs_off = off + pos
+            coff = (abs_off // cs) * cs
+            in_off = abs_off - coff
+            n = min(cs - in_off, len(data) - pos)
+            stage_id = f"{self.client_id}.{seq}.{part}"
+            owner = self.ring.node_for(chunk_key(ino, coff))
+            # parallel transfers: all start at t0
+            res, te = self.router.rpc(
+                self.local_node, owner, "rpc_stage_write", t0,
+                nbytes_out=n + 256,
+                embedded_local=self._is_embedded(owner),
+                ino=ino, chunk_off=coff, off=in_off,
+                data=data[pos:pos + n], stage_id=stage_id,
+                nl_version=self.nl_version)
+            ends.append(te)
+            staged.setdefault(coff, []).append(stage_id)
+            pos += n
+            part += 1
+        if ends:
+            self.clock.advance_to(max(ends))
+        self._bump("write_bytes", len(data))
+        return [(c, ids) for c, ids in sorted(staged.items())]
+
+    def flush_write(self, ino: int, staged: list, new_size: int,
+                    seq: int) -> None:
+        owner = self.ring.node_for(meta_key(ino))
+        self._rpc(owner, "coord_flush_write", client_id=self.client_id,
+                  seq=seq, ino=ino, staged=staged, new_size=new_size,
+                  mtime=self.clock.now, nl_version=self.nl_version)
+        if self.cfg.consistency == "weak" and ino in self._attrs:
+            self._attrs[ino]["size"] = new_size
+
+    def read_range(self, ino: int, off: int, length: int, meta: dict,
+                   handle: _Handle | None = None) -> bytes:
+        """Assemble [off, off+length) from page cache / stream cache /
+        cluster-local cache, with chunk-granular readahead."""
+        size = meta["size"]
+        length = max(0, min(length, size - off))
+        if length == 0:
+            return b""
+        cs = self.chunk_size
+        needed = self._chunks_spanned(off, length)
+        weak = self.cfg.consistency == "weak"
+        version = meta.get("version")
+
+        # readahead decision: sequential if this read continues the last one
+        ra = 0
+        if handle is not None:
+            if handle.last_read_end in (off, -1):
+                ra = self.cfg.readahead_chunks
+            handle.last_read_end = off + length
+        fetch = list(needed)
+        if ra:
+            nxt = needed[-1] + cs
+            while len(fetch) < len(needed) + ra and nxt < size:
+                fetch.append(nxt)
+                nxt += cs
+
+        got: dict[int, bytes] = {}
+        ready: dict[int, float] = {}
+        t0 = self.clock.now
+        for coff in fetch:
+            cached = None
+            if weak:
+                # close-to-open: entries are valid for the inode version
+                # observed at open(); a newer version forces a refetch
+                ent = self._page_get(ino, coff, version)
+                if ent is not None:
+                    cached, ready[coff] = ent
+            elif handle is not None:
+                ent = handle.stream_cache.get(coff)
+                if ent is not None and ent[2] == version:
+                    cached = ent[0]
+                    ready[coff] = ent[1]
+                    self._bump("stream_hits")
+            if cached is not None:
+                got[coff] = cached
+                continue
+            owner = self.ring.node_for(chunk_key(ino, coff))
+            want = min(cs, size - coff)
+            res, te = self.router.rpc(
+                self.local_node, owner, "rpc_read_chunk", t0,
+                nbytes_in=want + 256,
+                embedded_local=self._is_embedded(owner),
+                ino=ino, chunk_off=coff, off=0, length=want,
+                cos_bucket=meta.get("cos_bucket"),
+                cos_key=meta.get("cos_key"), file_size=size,
+                nl_version=self.nl_version)
+            got[coff] = res
+            ready[coff] = te
+            self._bump("chunk_fetches")
+            if weak:
+                self._page_put(ino, coff, res, te, version or 0)
+            elif handle is not None:
+                handle.stream_cache[coff] = (res, te, version or 0)
+        # the foreground read waits only for the chunks it returns; readahead
+        # chunks complete in the background (their ready time is recorded in
+        # the page/stream cache and charged when consumed)
+        need_end = max((ready[c] for c in needed if c in ready), default=t0)
+        self.clock.advance_to(max(t0, need_end))
+        # copy-to-application cost: node memory bandwidth bounds cache hits
+        self.clock.sleep(length / self.router.hw.mem_bps)
+
+        out = bytearray()
+        for coff in needed:
+            data = got.get(coff, b"")
+            s = max(off, coff) - coff
+            e = min(off + length, coff + cs) - coff
+            chunk_data = data if len(data) >= e else \
+                data + b"\0" * (e - len(data))
+            out += chunk_data[s:e]
+        self._bump("read_bytes", len(out))
+        return bytes(out)
+
+    # =====================================================================
+    # persistence
+    # =====================================================================
+    def fsync_ino(self, ino: int) -> str:
+        owner = self.ring.node_for(meta_key(ino))
+        res = self._rpc(owner, "coord_persist", ino=ino,
+                        client_id=self.client_id, seq=self.next_seq())
+        return res.get("outcome", "?")

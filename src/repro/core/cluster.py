@@ -1,0 +1,354 @@
+"""Cluster orchestration: bootstrap, elastic scaling, background flush (§4.3).
+
+`Cluster` plays the role of the paper's Kubernetes operator + CSI controller:
+it creates/destroys `CacheServer` processes and drives the reconfiguration
+transactions.  A node join/leave is:
+
+  1. make affected servers read-only (the paper's migration window),
+  2. every server scans for objects whose owner changes under the new ring
+     (dirty metadata + dirty chunks migrate; directories always migrate;
+     clean objects are dropped — refetchable from COS),
+  3. the node-list update commits via the same internal 2PC used for file
+     operations, keyed on the reserved `__nodelist__` ring key,
+  4. servers become writable again; stale clients see ESTALE and re-pull the
+     node list (§4.3).
+
+Scale-down *uploads* dirty data to COS instead of migrating it (§5.5); the
+removal of the last node is zero scaling: flush everything and stop — "which
+did not need a transaction" (§6.5).
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+
+from .cos import CosStore
+from .hashring import HashRing
+from .net import Router, SimCrash, SimTimeout
+from .server import BucketMount, CacheServer, NODELIST_KEY, ServerConfig
+from .simclock import HardwareModel, SimClock
+from .types import (Cmd, Errno, FSError, InodeKind, InodeMeta, ROOT_INODE,
+                    chunk_key, meta_key)
+
+_CLUSTER_CLIENT_ID = 0  # reserved transaction client id for the operator
+
+
+@dataclass
+class ScaleStats:
+    """What one reconfiguration did — feeds Figs. 13/14."""
+
+    op: str = ""
+    node: str = ""
+    t_start: float = 0.0
+    t_end: float = 0.0
+    migrated_metas: int = 0
+    migrated_dirs: int = 0
+    migrated_chunks: int = 0
+    migrated_bytes: int = 0
+    uploaded_inodes: int = 0
+
+    @property
+    def duration(self) -> float:
+        return self.t_end - self.t_start
+
+
+class Cluster:
+    def __init__(self, workdir: str, buckets: list[BucketMount],
+                 hw: HardwareModel | None = None,
+                 cfg: ServerConfig | None = None,
+                 clock: SimClock | None = None,
+                 cos: CosStore | None = None) -> None:
+        self.workdir = workdir
+        self.buckets = buckets
+        self.hw = hw or HardwareModel()
+        self.cfg = cfg or ServerConfig()
+        self.clock = clock or SimClock()
+        self.cos = cos or CosStore(self.clock, self.hw)
+        self.router = Router(self.clock, self.hw, self.cfg.rpc_timeout_s)
+        self.servers: dict[str, CacheServer] = {}
+        self._next_uid = 1
+        self._uids: dict[str, int] = {}
+        self._seq = 1
+        self.scale_log: list[ScaleStats] = []
+        os.makedirs(workdir, exist_ok=True)
+
+    # =====================================================================
+    # helpers
+    # =====================================================================
+    def _new_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def any_server(self) -> CacheServer:
+        for s in self.servers.values():
+            if s.alive:
+                return s
+        raise RuntimeError("no live servers")
+
+    def node_list(self) -> list[str]:
+        return self.any_server().node_list if self.servers else []
+
+    def _make_server(self, node_id: str) -> CacheServer:
+        uid = self._uids.get(node_id)
+        if uid is None:
+            uid = self._next_uid
+            self._next_uid += 1
+            self._uids[node_id] = uid
+        s = CacheServer(node_id, uid, os.path.join(self.workdir, node_id),
+                        self.clock, self.router, self.cos, self.hw, self.cfg,
+                        self.buckets)
+        self.servers[node_id] = s
+        return s
+
+    # =====================================================================
+    # bootstrap (first node[s]; "creation ... did not need a transaction")
+    # =====================================================================
+    def start(self, n_nodes: int = 1, names: list[str] | None = None
+              ) -> list[str]:
+        assert not self.servers, "cluster already started"
+        names = names or [f"n{i}" for i in range(n_nodes)]
+        t = self.clock.now
+        for nm in names:
+            self._make_server(nm)
+        ring = HashRing(names)
+        nl_op = {"kind": "nodelist_set", "nodes": names, "version": 1}
+        for s in self.servers.values():
+            t = max(t, s._log(Cmd.LOCAL_META_UPDATE, {"ops": [nl_op]}, t))
+        # root inode + one directory per mounted bucket (§3.2: cache servers
+        # at first maintain only the root directory with bucket directories)
+        root_owner = self.servers[ring.node_for(meta_key(ROOT_INODE))]
+        root = InodeMeta(ino=ROOT_INODE, kind=InodeKind.DIR, loaded=True)
+        for bm in self.buckets:
+            bino = root_owner.alloc_ino()
+            root.children[bm.dirname] = bino
+            bmeta = InodeMeta(ino=bino, kind=InodeKind.DIR,
+                              cos_bucket=bm.bucket, cos_key="", loaded=False)
+            owner = self.servers[ring.node_for(meta_key(bino))]
+            t = max(t, owner._log(Cmd.LOCAL_META_UPDATE,
+                                  {"ops": [{"kind": "meta_put",
+                                            "meta": bmeta.to_payload()}]}, t))
+        t = max(t, root_owner._log(Cmd.LOCAL_META_UPDATE,
+                                   {"ops": [{"kind": "meta_put",
+                                             "meta": root.to_payload()}]}, t))
+        self.clock.advance_to(t)
+        return names
+
+    # =====================================================================
+    # node join (§4.3, §5.5 "minimize potential reads after scaling up")
+    # =====================================================================
+    def add_node(self, node_id: str | None = None) -> ScaleStats:
+        node_id = node_id or f"n{len(self._uids)}"
+        st = ScaleStats(op="join", node=node_id, t_start=self.clock.now)
+        old_nodes = self.node_list()
+        assert node_id not in old_nodes
+        joiner = self.servers.get(node_id) or self._make_server(node_id)
+        new_nodes = sorted(old_nodes + [node_id])
+        new_ring = HashRing(new_nodes)
+        t = self.clock.now
+
+        # 1. freeze writers on affected nodes ("the node makes FS read-only")
+        scans = {}
+        for nm in old_nodes:
+            s = self.servers[nm]
+            scan = s.migration_scan(new_ring)
+            if any(scan[k] for k in scan):
+                scans[nm] = scan
+                _, t = self.router.rpc(None, nm, "rpc_set_read_only", t,
+                                       value=True)
+        # 2. migrate dirty objects + directories to the joiner
+        for nm, scan in scans.items():
+            moved, t = self.servers[nm].migrate_out(scan, t)
+            st.migrated_metas += moved["metas"]
+            st.migrated_dirs += moved["dirs"]
+            st.migrated_chunks += moved["chunks"]
+            st.migrated_bytes += moved["bytes"]
+        # 3. node-list transaction over *all* nodes (§6.5: "our transaction
+        #    protocol synchronized the entire node list to every node")
+        t = self._commit_node_list(new_nodes, t)
+        # 4. thaw
+        for nm in scans:
+            _, t = self.router.rpc(None, nm, "rpc_set_read_only", t,
+                                   value=False)
+        self.clock.advance_to(t)
+        st.t_end = t
+        self.scale_log.append(st)
+        return st
+
+    # =====================================================================
+    # node leave (§5.5: upload dirty, migrate directories) and zero scaling
+    # =====================================================================
+    def remove_node(self, node_id: str) -> ScaleStats:
+        st = ScaleStats(op="leave", node=node_id, t_start=self.clock.now)
+        old_nodes = self.node_list()
+        assert node_id in old_nodes
+        leaver = self.servers[node_id]
+        remaining = [n for n in old_nodes if n != node_id]
+        t = self.clock.now
+
+        if not remaining:
+            return self.scale_to_zero(st)
+
+        # 1. freeze the leaver, persist every dirty inode it is involved in
+        _, t = self.router.rpc(None, node_id, "rpc_set_read_only", t,
+                               value=True)
+        t, n_up = self._persist_node_dirty(leaver, t)
+        st.uploaded_inodes += n_up
+        # 2. migrate directories (always) and any residual dirty objects that
+        #    could not be uploaded (no COS backing) to their new owners
+        new_ring = HashRing(remaining)
+        scan = leaver.migration_scan(new_ring)
+        moved, t = leaver.migrate_out(scan, t)
+        st.migrated_metas += moved["metas"]
+        st.migrated_dirs += moved["dirs"]
+        st.migrated_chunks += moved["chunks"]
+        st.migrated_bytes += moved["bytes"]
+        # 3. node-list transaction over the remaining nodes
+        t = self._commit_node_list(remaining, t, exclude=node_id)
+        # 4. shut the leaver down
+        leaver.alive = False
+        self.router.unregister(node_id)
+        leaver.close()
+        del self.servers[node_id]
+        self.clock.advance_to(t)
+        st.t_end = t
+        self.scale_log.append(st)
+        return st
+
+    def scale_to_zero(self, st: ScaleStats | None = None) -> ScaleStats:
+        """§6.5: the removal of the last node — flush all dirty state to COS
+        (files, deletes, and directory markers) and stop.  No transaction."""
+        st = st or ScaleStats(op="zero", t_start=self.clock.now)
+        st.op = "zero"
+        t = self.clock.now
+        for s in list(self.servers.values()):
+            if not s.alive:
+                continue
+            _, t = self.router.rpc(None, s.node_id, "rpc_set_read_only", t,
+                                   value=True)
+            t2, n_up = self._persist_node_dirty(s, t)
+            t = max(t, t2)
+            st.uploaded_inodes += n_up
+        for s in list(self.servers.values()):
+            s.alive = False
+            self.router.unregister(s.node_id)
+            s.close()
+        self.servers.clear()
+        self.clock.advance_to(t)
+        st.t_end = t
+        self.scale_log.append(st)
+        return st
+
+    def _persist_node_dirty(self, s: CacheServer, t: float
+                            ) -> tuple[float, int]:
+        """Upload every dirty inode `s` owns metadata or chunks for.  The
+        persisting coordinator is always the inode's metadata owner."""
+        inv = s.dirty_inventory()
+        inos = set(inv["metas"]) | {ino for ino, _ in inv["chunks"]}
+        n = 0
+        for ino in sorted(inos):
+            owner = s.owner(meta_key(ino))
+            try:
+                res, t = self.router.rpc(None, owner, "coord_persist", t,
+                                         ino=ino,
+                                         client_id=_CLUSTER_CLIENT_ID,
+                                         seq=self._new_seq())
+                if res.get("outcome") in ("commit", "deleted", "dir"):
+                    n += 1
+            except (SimTimeout, SimCrash, FSError):
+                pass
+        return t, n
+
+    def _commit_node_list(self, nodes: list[str], t: float,
+                          exclude: str | None = None) -> float:
+        """2PC the new node list to every participant, coordinated by the
+        owner of the reserved __nodelist__ key in the *old* ring."""
+        coord_node = self.any_server().owner(NODELIST_KEY)
+        if coord_node == exclude or coord_node not in self.servers:
+            coord_node = nodes[0]
+        coord = self.servers[coord_node]
+        version = max(s.node_list_version for s in self.servers.values()) + 1
+        op = {"kind": "nodelist_set", "nodes": nodes, "version": version}
+        plan = {nm: {"cmd": Cmd.TX_PREPARE_NODELIST, "ops": [op],
+                     "keys": [NODELIST_KEY]}
+                for nm in nodes}
+        res, t = coord.coord_execute(t, _CLUSTER_CLIENT_ID, self._new_seq(),
+                                     plan)
+        if res["outcome"] != "commit":
+            raise FSError(Errno.ECONFLICT, "node-list transaction aborted")
+        return t
+
+    # =====================================================================
+    # failure handling
+    # =====================================================================
+    def crash_node(self, node_id: str) -> None:
+        self.servers[node_id].crash()
+
+    def restart_node(self, node_id: str) -> float:
+        s = self.servers[node_id]
+        t = s.restart()
+        t = s.recover_pending(t)
+        self.clock.advance_to(t)
+        return t
+
+    # =====================================================================
+    # background write-back ("expiration of dirty objects", §5.2)
+    # =====================================================================
+    def tick_flush(self, max_inodes: int | None = None) -> tuple[int, float]:
+        """Persist dirty inodes across the cluster; returns (count, t_end).
+        Virtual time: uploads occupy COS/NIC resource lanes, so foreground
+        work issued meanwhile naturally overlaps (Fig. 12)."""
+        t = self.clock.now
+        done = 0
+        seen: set[int] = set()
+        for s in list(self.servers.values()):
+            if not s.alive:
+                continue
+            for ino in list(s.metas.dirty_inos()):
+                if ino in seen or ino == ROOT_INODE:
+                    continue
+                m = s.metas.get(ino)
+                if m is None or s.owner(meta_key(ino)) != s.node_id:
+                    continue
+                if m.cos_bucket is None or m.cos_key is None:
+                    continue
+                if m.kind == InodeKind.DIR and not m.deleted:
+                    continue  # dirs persist only at zero-scale
+                seen.add(ino)
+                try:
+                    res, t = self.router.rpc(None, s.node_id, "coord_persist",
+                                             t, ino=ino,
+                                             client_id=_CLUSTER_CLIENT_ID,
+                                             seq=self._new_seq())
+                    if res.get("outcome") in ("commit", "deleted"):
+                        done += 1
+                except (SimTimeout, SimCrash, FSError):
+                    continue
+                if max_inodes is not None and done >= max_inodes:
+                    return done, t
+        return done, t
+
+    def drain_dirty(self, max_rounds: int = 8) -> int:
+        total = 0
+        for _ in range(max_rounds):
+            n, t = self.tick_flush()
+            self.clock.advance_to(t)
+            total += n
+            if n == 0:
+                break
+        return total
+
+    # =====================================================================
+    # stats
+    # =====================================================================
+    def total_local_bytes(self) -> int:
+        return sum(s.local_bytes() for s in self.servers.values())
+
+    def dirty_counts(self) -> dict:
+        metas = sum(len(s.metas.dirty_inos()) for s in self.servers.values())
+        chunks = sum(len(s.chunks.dirty_keys()) for s in self.servers.values())
+        return {"dirty_metas": metas, "dirty_chunks": chunks}
+
+    def close(self) -> None:
+        for s in self.servers.values():
+            s.close()

@@ -1,0 +1,171 @@
+"""Simulated cloud object storage (S3-compatible surface).
+
+Implements the API subset objcache needs (§5.2): PutObject, GetObject with
+range reads, ListObjectsV2-style prefix+delimiter listing, DeleteObject, and
+multipart upload (begin / add part / commit / abort).  Backed by an in-memory
+dict of real bytes; timing charged against a shared `Resource` modelling a
+regional bucket (per-request latency + per-connection bandwidth with bounded
+parallelism).  Failure injection hooks let tests exercise the black-dot crash
+points of Fig. 8.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+from .simclock import HardwareModel, Resource, SimClock
+
+
+class CosError(Exception):
+    pass
+
+
+@dataclass
+class _MPU:
+    bucket: str
+    key: str
+    upload_id: str
+    parts: dict[int, bytes] = field(default_factory=dict)
+
+
+class CosStore:
+    """One external storage endpoint holding many buckets."""
+
+    def __init__(self, clock: SimClock, hw: HardwareModel | None = None) -> None:
+        self.clock = clock
+        self.hw = hw or HardwareModel()
+        self.resource: Resource = self.hw.make_cos()
+        self._objects: dict[tuple[str, str], bytes] = {}
+        self._mpus: dict[str, _MPU] = {}
+        self._upload_ids = itertools.count(1)
+        # failure injection: set of op names that fail once when next invoked
+        self._fail_once: set[str] = set()
+        # stats
+        self.ops: dict[str, int] = {}
+        self.bytes_in = 0
+        self.bytes_out = 0
+
+    # ---- failure injection -------------------------------------------------
+    def fail_next(self, op: str) -> None:
+        self._fail_once.add(op)
+
+    def _maybe_fail(self, op: str) -> None:
+        self.ops[op] = self.ops.get(op, 0) + 1
+        if op in self._fail_once:
+            self._fail_once.discard(op)
+            raise CosError(f"injected failure: {op}")
+
+    # ---- data plane ----------------------------------------------------------
+    def make_bucket(self, bucket: str) -> None:
+        # buckets are implicit; kept for API parity
+        self._maybe_fail("make_bucket")
+
+    def put_object(self, bucket: str, key: str, data: bytes,
+                   start: float | None = None) -> float:
+        self._maybe_fail("put_object")
+        t0 = self.clock.now if start is None else start
+        end = self.resource.acquire(t0, len(data))
+        self._objects[(bucket, key)] = bytes(data)
+        self.bytes_in += len(data)
+        return end
+
+    def get_object(self, bucket: str, key: str,
+                   rng: tuple[int, int] | None = None,
+                   start: float | None = None) -> tuple[bytes, float]:
+        """rng = (offset, length) half-open byte range."""
+        self._maybe_fail("get_object")
+        obj = self._objects.get((bucket, key))
+        if obj is None:
+            raise CosError(f"NoSuchKey: s3://{bucket}/{key}")
+        if rng is not None:
+            off, ln = rng
+            data = obj[off:off + ln]
+        else:
+            data = obj
+        t0 = self.clock.now if start is None else start
+        end = self.resource.acquire(t0, len(data))
+        self.bytes_out += len(data)
+        return data, end
+
+    def head_object(self, bucket: str, key: str,
+                    start: float | None = None) -> tuple[int, float]:
+        self._maybe_fail("head_object")
+        obj = self._objects.get((bucket, key))
+        if obj is None:
+            raise CosError(f"NoSuchKey: s3://{bucket}/{key}")
+        t0 = self.clock.now if start is None else start
+        return len(obj), self.resource.acquire(t0, 0)
+
+    def exists(self, bucket: str, key: str) -> bool:
+        return (bucket, key) in self._objects
+
+    def list_prefix(self, bucket: str, prefix: str, delimiter: str = "/",
+                    start: float | None = None
+                    ) -> tuple[list[tuple[str, int]], list[str], float]:
+        """Returns (objects=[(key,size)...], common_prefixes, t_end); COS has
+        no directories — keys under `prefix` up to `delimiter` (§3.2, §5.4)."""
+        self._maybe_fail("list_prefix")
+        objs: list[tuple[str, int]] = []
+        prefixes: set[str] = set()
+        for (b, k), v in self._objects.items():
+            if b != bucket or not k.startswith(prefix):
+                continue
+            rest = k[len(prefix):]
+            if not rest:
+                objs.append((k, len(v)))
+                continue
+            if delimiter and delimiter in rest:
+                prefixes.add(prefix + rest.split(delimiter, 1)[0] + delimiter)
+            else:
+                objs.append((k, len(v)))
+        t0 = self.clock.now if start is None else start
+        end = self.resource.acquire(t0, 0)
+        return sorted(objs), sorted(prefixes), end
+
+    def delete_object(self, bucket: str, key: str,
+                      start: float | None = None) -> float:
+        self._maybe_fail("delete_object")
+        self._objects.pop((bucket, key), None)  # S3 delete is idempotent
+        t0 = self.clock.now if start is None else start
+        return self.resource.acquire(t0, 0)
+
+    # ---- multipart upload (§5.2) ---------------------------------------------
+    def mpu_begin(self, bucket: str, key: str,
+                  start: float | None = None) -> tuple[str, float]:
+        self._maybe_fail("mpu_begin")
+        uid = f"mpu-{next(self._upload_ids)}"
+        self._mpus[uid] = _MPU(bucket, key, uid)
+        t0 = self.clock.now if start is None else start
+        return uid, self.resource.acquire(t0, 0)
+
+    def mpu_add(self, upload_id: str, part_no: int, data: bytes,
+                start: float | None = None) -> float:
+        self._maybe_fail("mpu_add")
+        mpu = self._mpus.get(upload_id)
+        if mpu is None:
+            raise CosError(f"NoSuchUpload: {upload_id}")
+        mpu.parts[part_no] = bytes(data)
+        self.bytes_in += len(data)
+        t0 = self.clock.now if start is None else start
+        return self.resource.acquire(t0, len(data))
+
+    def mpu_commit(self, upload_id: str,
+                   start: float | None = None) -> float:
+        self._maybe_fail("mpu_commit")
+        mpu = self._mpus.pop(upload_id, None)
+        if mpu is None:
+            raise CosError(f"NoSuchUpload: {upload_id}")
+        blob = b"".join(mpu.parts[i] for i in sorted(mpu.parts))
+        self._objects[(mpu.bucket, mpu.key)] = blob
+        t0 = self.clock.now if start is None else start
+        return self.resource.acquire(t0, 0)
+
+    def mpu_abort(self, upload_id: str, start: float | None = None) -> float:
+        self._maybe_fail("mpu_abort")
+        self._mpus.pop(upload_id, None)  # idempotent
+        t0 = self.clock.now if start is None else start
+        return self.resource.acquire(t0, 0)
+
+    def outstanding_mpus(self) -> list[str]:
+        return sorted(self._mpus)

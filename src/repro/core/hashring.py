@@ -1,0 +1,94 @@
+"""Consistent hashing (§4.2).
+
+Deterministic (blake2b-based) ring with optional virtual nodes for balance.
+A key is owned by the node whose hash is the largest value <= hash(key)
+(i.e. the key's *predecessor* on the ring, matching the paper's wording that
+metadata/chunk owners are "predecessor nodes").  Also provides the migration
+set computation used at join/leave (§4.3): a node join affects only the
+ranges its virtual points split.
+"""
+
+from __future__ import annotations
+
+import bisect
+import hashlib
+from dataclasses import dataclass
+
+
+def h64(key: str) -> int:
+    return int.from_bytes(hashlib.blake2b(key.encode(), digest_size=8).digest(),
+                          "big")
+
+
+@dataclass(frozen=True)
+class RingPoint:
+    hash: int
+    node: str
+
+
+class HashRing:
+    def __init__(self, nodes: list[str] | None = None, vnodes: int = 32) -> None:
+        self.vnodes = vnodes
+        self._points: list[RingPoint] = []
+        self._hashes: list[int] = []
+        self._nodes: set[str] = set()
+        for n in nodes or []:
+            self.add_node(n)
+
+    # ---- membership ----------------------------------------------------------
+    def nodes(self) -> list[str]:
+        return sorted(self._nodes)
+
+    def __contains__(self, node: str) -> bool:
+        return node in self._nodes
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def _vpoints(self, node: str) -> list[int]:
+        return [h64(f"{node}#{i}") for i in range(self.vnodes)]
+
+    def add_node(self, node: str) -> None:
+        if node in self._nodes:
+            return
+        self._nodes.add(node)
+        for hv in self._vpoints(node):
+            idx = bisect.bisect_left(self._hashes, hv)
+            self._hashes.insert(idx, hv)
+            self._points.insert(idx, RingPoint(hv, node))
+
+    def remove_node(self, node: str) -> None:
+        if node not in self._nodes:
+            return
+        self._nodes.discard(node)
+        keep = [(p, h) for p, h in zip(self._points, self._hashes)
+                if p.node != node]
+        self._points = [p for p, _ in keep]
+        self._hashes = [h for _, h in keep]
+
+    def copy(self) -> "HashRing":
+        r = HashRing(vnodes=self.vnodes)
+        for n in self._nodes:
+            r.add_node(n)
+        return r
+
+    # ---- lookup ---------------------------------------------------------------
+    def node_for(self, key: str) -> str:
+        if not self._points:
+            raise RuntimeError("empty hash ring")
+        hv = h64(key)
+        # predecessor point: largest point hash <= hv, wrapping to the end
+        idx = bisect.bisect_right(self._hashes, hv) - 1
+        return self._points[idx].node  # idx == -1 wraps to last point
+
+    # ---- migration math (§4.3) -------------------------------------------------
+    @staticmethod
+    def moved_keys(before: "HashRing", after: "HashRing",
+                   keys: list[str]) -> dict[str, tuple[str, str]]:
+        """Returns {key: (old_owner, new_owner)} for keys whose owner changes."""
+        out = {}
+        for k in keys:
+            a, b = before.node_for(k), after.node_for(k)
+            if a != b:
+                out[k] = (a, b)
+        return out

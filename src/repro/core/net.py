@@ -1,0 +1,92 @@
+"""RPC fabric for the in-process cluster.
+
+Servers call each other through `Router.rpc(...)` — a direct Python call
+wrapped with virtual-time accounting (destination NIC bandwidth + RTT, or the
+loopback cost for a colocated client in the detached deployment, or zero for
+the embedded deployment, §3.1).  Failure injection: dead destinations time
+out; named injection points raise `SimCrash` inside server code to emulate
+the black-dot crashes of Fig. 8.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Callable
+
+from .simclock import HardwareModel, SimClock
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .server import CacheServer
+
+
+class SimTimeout(Exception):
+    """RPC to a dead/partitioned node; charged `timeout_s` of virtual time."""
+
+
+class SimCrash(Exception):
+    """A server crashed at an injected point mid-operation."""
+
+    def __init__(self, node: str, point: str) -> None:
+        super().__init__(f"{node} crashed at {point}")
+        self.node = node
+        self.point = point
+
+
+class Router:
+    def __init__(self, clock: SimClock, hw: HardwareModel,
+                 timeout_s: float = 1.0) -> None:
+        self.clock = clock
+        self.hw = hw
+        self.timeout_s = timeout_s
+        self.servers: dict[str, "CacheServer"] = {}
+        self.partitioned: set[str] = set()
+        # stats
+        self.rpc_count = 0
+        self.rpc_bytes = 0
+
+    def register(self, server: "CacheServer") -> None:
+        self.servers[server.node_id] = server
+
+    def unregister(self, node_id: str) -> None:
+        self.servers.pop(node_id, None)
+
+    def reachable(self, node_id: str) -> bool:
+        s = self.servers.get(node_id)
+        return s is not None and s.alive and node_id not in self.partitioned
+
+    # ---- timing ----------------------------------------------------------------
+    def xfer(self, src: str | None, dst: str, nbytes: int, start: float,
+             embedded_local: bool = False) -> float:
+        """Time for a one-way transfer src->dst.  src None = external client."""
+        if src == dst:
+            if embedded_local:
+                return start  # embedded deployment: same process, no hop
+            # detached deployment, same node: loopback
+            return start + self.hw.loopback_rtt_s / 2 + nbytes / self.hw.loopback_bps
+        dst_srv = self.servers.get(dst)
+        nic = dst_srv.nic if dst_srv is not None else None
+        t = start + self.hw.net_rtt_s / 2
+        if nic is not None:
+            return nic.acquire(t, nbytes)
+        return t + nbytes / self.hw.nic_bps
+
+    def rpc(self, src: str | None, dst: str, method: str, start: float,
+            nbytes_out: int = 256, nbytes_in: int = 256,
+            embedded_local: bool = False, **kwargs: Any) -> tuple[Any, float]:
+        """Invoke `method` on server `dst`.  The server method signature is
+        `m(start: float, **kwargs) -> (result, end_time)`.  Returns the result
+        and the time the reply lands back at the caller."""
+        self.rpc_count += 1
+        self.rpc_bytes += nbytes_out + nbytes_in
+        if not self.reachable(dst):
+            raise SimTimeout(f"rpc {method} to {dst}: timeout "
+                             f"(+{self.timeout_s}s at t={start:.6f})")
+        arrive = self.xfer(src, dst, nbytes_out, start, embedded_local)
+        server = self.servers[dst]
+        fn: Callable = getattr(server, method)
+        result, end = fn(start=arrive, **kwargs)
+        back = self.xfer(dst, src, nbytes_in, end, embedded_local) \
+            if src is not None else self.xfer(dst, dst, nbytes_in, end, True)
+        return result, back
+
+    def charge_timeout(self, start: float) -> float:
+        return start + self.timeout_s

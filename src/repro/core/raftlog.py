@@ -1,0 +1,239 @@
+"""Raft-style two-level write-ahead log (§4.6, Fig. 6).
+
+The paper runs Raft logging *without replication* (single member; replication
+is future work) — what it relies on is: (a) a durable, checksummed, append-only
+log of state-machine commands with a leader term, replayed after a crash, and
+(b) *second-level logs* holding variable-sized bulk payloads (chunk writes),
+referenced from primary entries by (file_id, offset, length) so the primary
+log stays small.
+
+Primary entry framing (binary, little-endian):
+
+    magic   u32   0x0bjc (0x0b1c0bjc truncated) — 0x0B1C0B1C
+    term    u32
+    index   u64
+    cmd     u32   Cmd enum
+    plen    u32   payload length
+    crc     u32   crc32 over (term, index, cmd, payload)
+    payload bytes JSON (UTF-8) dict, may embed a bulk ref
+
+Replay stops at the first torn/corrupt record (simulated crash may truncate
+the tail).  A full-record checksum mismatch *before* the tail is the paper's
+"mismatched checksums" case (§3.4): the server refuses to start and the
+cluster must be rebuilt from external storage.
+
+Log compaction: `compact(snapshot_payload)` atomically rewrites the log with a
+single SNAPSHOT entry carrying the serialized state machine, then truncates
+second-level logs that are no longer referenced.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+import zlib
+from dataclasses import dataclass
+from typing import Iterator
+
+from .simclock import Resource, SimClock
+from .types import Cmd
+
+_MAGIC = 0x0B1C0B1C
+_HDR = struct.Struct("<IIQII I".replace(" ", ""))  # magic, term, index, cmd, plen, crc
+
+
+class ChecksumError(Exception):
+    """Non-tail corruption: unrecoverable without external storage (§3.4)."""
+
+
+@dataclass(frozen=True)
+class BulkRef:
+    file_id: int
+    offset: int
+    length: int
+
+    def to_payload(self) -> dict:
+        return {"file_id": self.file_id, "offset": self.offset,
+                "length": self.length}
+
+    @staticmethod
+    def from_payload(p: dict) -> "BulkRef":
+        return BulkRef(p["file_id"], p["offset"], p["length"])
+
+
+@dataclass
+class LogEntry:
+    term: int
+    index: int
+    cmd: Cmd
+    payload: dict
+
+
+class RaftLog:
+    """Single-member Raft log: durable append + replay + compaction.
+
+    `disk` is the owning node's NVMe `Resource`; every append charges a
+    direct-I/O + fsync write (§5: "direct I/O and fsync() after every log
+    append").  Time accounting returns the completion timestamp.
+    """
+
+    SECOND_LEVEL_FILES = 4  # stripe bulk data over a few files
+
+    def __init__(self, dirpath: str, clock: SimClock, disk: Resource) -> None:
+        self.dir = dirpath
+        self.clock = clock
+        self.disk = disk
+        os.makedirs(dirpath, exist_ok=True)
+        self.path = os.path.join(dirpath, "raft.log")
+        self._f = open(self.path, "ab")
+        self.term = self._load_term()
+        self.next_index = 1
+        self._bulk_files: dict[int, "os.PathLike | str"] = {}
+        self._bulk_handles: dict[int, object] = {}
+        self._bulk_sizes: dict[int, int] = {}
+        for i in range(self.SECOND_LEVEL_FILES):
+            p = os.path.join(dirpath, f"bulk.{i}.log")
+            self._bulk_files[i] = p
+            self._bulk_handles[i] = open(p, "ab")
+            self._bulk_sizes[i] = os.path.getsize(p)
+        self._next_bulk = 0
+        self.appended_bytes = 0
+
+    # ---- term management -------------------------------------------------------
+    def _term_path(self) -> str:
+        return os.path.join(self.dir, "term")
+
+    def _load_term(self) -> int:
+        try:
+            with open(self._term_path()) as f:
+                return int(f.read().strip() or "1")
+        except FileNotFoundError:
+            return 1
+
+    def bump_term(self) -> int:
+        """A restart is a new 'leadership' of the single member."""
+        self.term += 1
+        with open(self._term_path(), "w") as f:
+            f.write(str(self.term))
+        return self.term
+
+    # ---- append ---------------------------------------------------------------
+    def append_bulk(self, data: bytes, start: float | None = None
+                    ) -> tuple[BulkRef, float]:
+        fid = self._next_bulk
+        self._next_bulk = (self._next_bulk + 1) % self.SECOND_LEVEL_FILES
+        fh = self._bulk_handles[fid]
+        off = self._bulk_sizes[fid]
+        fh.write(data)
+        fh.flush()
+        os.fsync(fh.fileno())
+        self._bulk_sizes[fid] = off + len(data)
+        t0 = self.clock.now if start is None else start
+        end = self.disk.acquire(t0, len(data))
+        self.appended_bytes += len(data)
+        return BulkRef(fid, off, len(data)), end
+
+    def append(self, cmd: Cmd, payload: dict,
+               start: float | None = None) -> tuple[int, float]:
+        body = json.dumps(payload, separators=(",", ":")).encode()
+        idx = self.next_index
+        crc = zlib.crc32(struct.pack("<IQI", self.term, idx, int(cmd)) + body)
+        rec = _HDR.pack(_MAGIC, self.term, idx, int(cmd), len(body), crc) + body
+        self._f.write(rec)
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self.next_index += 1
+        t0 = self.clock.now if start is None else start
+        end = self.disk.acquire(t0, len(rec))
+        self.appended_bytes += len(rec)
+        return idx, end
+
+    def read_bulk(self, ref: BulkRef) -> bytes:
+        with open(self._bulk_files[ref.file_id], "rb") as f:
+            f.seek(ref.offset)
+            data = f.read(ref.length)
+        if len(data) != ref.length:
+            raise ChecksumError(f"bulk short read: {ref}")
+        return data
+
+    # ---- replay -----------------------------------------------------------------
+    def replay(self) -> Iterator[LogEntry]:
+        """Yields entries up to the first torn tail; raises ChecksumError on
+        non-tail corruption."""
+        self._f.flush()
+        with open(self.path, "rb") as f:
+            raw = f.read()
+        pos, n = 0, len(raw)
+        last_good = 0
+        while pos + _HDR.size <= n:
+            magic, term, idx, cmd, plen, crc = _HDR.unpack_from(raw, pos)
+            if magic != _MAGIC:
+                raise ChecksumError(f"bad magic at {pos}")
+            end = pos + _HDR.size + plen
+            if end > n:
+                break  # torn tail: crash mid-append — discard
+            body = raw[pos + _HDR.size:end]
+            want = zlib.crc32(struct.pack("<IQI", term, idx, cmd) + body)
+            if want != crc:
+                # corrupt in the middle => unrecoverable; torn at tail => stop
+                if end == n:
+                    break
+                raise ChecksumError(f"crc mismatch at index {idx}")
+            yield LogEntry(term, idx, Cmd(cmd), json.loads(body.decode()))
+            last_good = idx
+            pos = end
+        self.next_index = last_good + 1
+        # re-open append handle positioned at the last good record
+        self._f.close()
+        with open(self.path, "rb") as f:
+            good = f.read(pos)
+        with open(self.path, "wb") as f:
+            f.write(good)
+        self._f = open(self.path, "ab")
+
+    # ---- compaction -----------------------------------------------------------
+    def compact(self, snapshot_payload: dict) -> None:
+        """Rewrite the primary log as a single SNAPSHOT entry; bulk files are
+        rewritten via the snapshot's embedded data, so they can be truncated."""
+        self._f.close()
+        with open(self.path, "wb") as f:
+            pass
+        self._f = open(self.path, "ab")
+        self.next_index = 1
+        for fid, fh in self._bulk_handles.items():
+            fh.close()
+            with open(self._bulk_files[fid], "wb"):
+                pass
+            self._bulk_handles[fid] = open(self._bulk_files[fid], "ab")
+            self._bulk_sizes[fid] = 0
+        self.append(Cmd.SNAPSHOT, snapshot_payload)
+
+    def size_bytes(self) -> int:
+        return (os.path.getsize(self.path)
+                + sum(self._bulk_sizes.values()))
+
+    def close(self) -> None:
+        self._f.close()
+        for fh in self._bulk_handles.values():
+            fh.close()
+
+    # crash simulation: truncate the tail of the primary log as if the last
+    # append was torn by a power failure
+    def simulate_torn_tail(self, nbytes: int = 7) -> None:
+        self._f.flush()
+        size = os.path.getsize(self.path)
+        with open(self.path, "ab") as f:
+            f.truncate(max(0, size - nbytes))
+
+    def simulate_corruption(self, at_frac: float = 0.5) -> None:
+        self._f.flush()
+        size = os.path.getsize(self.path)
+        if size < _HDR.size + 4:
+            return
+        pos = max(_HDR.size, min(size - 2, int(size * at_frac)))
+        with open(self.path, "r+b") as f:
+            f.seek(pos)
+            b = f.read(1)
+            f.seek(pos)
+            f.write(bytes([b[0] ^ 0xFF]))

@@ -1,0 +1,165 @@
+"""Per-server in-memory working state: inode metadata table and chunk store.
+
+A chunk (§4.1) tracks its committed content as an ordered list of *segments*
+(apply-in-order overwrites), each backed by a second-level-log `BulkRef` or a
+COS fill; *outstanding writes* (§5.3) are staged per stage-id and promoted to
+committed segments by a flush transaction.  All mutations happen through the
+server's Raft state machine so replay reconstructs this exactly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .raftlog import BulkRef, RaftLog
+from .types import InodeMeta
+
+
+@dataclass
+class Segment:
+    off: int          # offset within the chunk
+    length: int
+    ref: BulkRef | None   # bytes in the second-level log; None = zeros
+                          # (truncate's zero-tail pseudo-segment, §5.4)
+
+    def to_payload(self) -> dict:
+        return {"off": self.off, "length": self.length,
+                "ref": self.ref.to_payload() if self.ref else None}
+
+    @staticmethod
+    def from_payload(p: dict) -> "Segment":
+        ref = BulkRef.from_payload(p["ref"]) if p.get("ref") else None
+        return Segment(p["off"], p["length"], ref)
+
+
+@dataclass
+class StagedWrite:
+    stage_id: str
+    off: int
+    length: int
+    ref: BulkRef
+
+    def to_payload(self) -> dict:
+        return {"stage_id": self.stage_id, "off": self.off,
+                "length": self.length, "ref": self.ref.to_payload()}
+
+    @staticmethod
+    def from_payload(p: dict) -> "StagedWrite":
+        return StagedWrite(p["stage_id"], p["off"], p["length"],
+                           BulkRef.from_payload(p["ref"]))
+
+
+@dataclass
+class ChunkState:
+    ino: int
+    chunk_off: int      # byte offset of this chunk within the file
+    version: int = 0
+    dirty: bool = False
+    deleted: bool = False
+    base_filled: list[Segment] = field(default_factory=list)   # clean COS fills
+    segments: list[Segment] = field(default_factory=list)      # committed writes
+    staged: dict[str, StagedWrite] = field(default_factory=dict)
+
+    # ---- content assembly ----------------------------------------------------
+    def covered(self, off: int, length: int) -> bool:
+        """True if [off, off+length) is covered by fills/segments (no need to
+        consult external storage)."""
+        need = [(off, off + length)]
+        for seg in self.base_filled + self.segments:
+            need = _subtract(need, (seg.off, seg.off + seg.length))
+            if not need:
+                return True
+        return not need
+
+    def materialize(self, log: RaftLog, length: int) -> bytes:
+        """Assemble the first `length` bytes of this chunk from fills then
+        committed segments in commit order (later wins)."""
+        buf = bytearray(length)
+        for seg in self.base_filled + self.segments:
+            if seg.off >= length:
+                continue
+            n = min(seg.length, length - seg.off)
+            data = b"\0" * n if seg.ref is None else log.read_bulk(seg.ref)
+            buf[seg.off:seg.off + n] = data[:n]
+        return bytes(buf)
+
+    def local_bytes(self) -> int:
+        return sum(s.length for s in self.base_filled + self.segments
+                   if s.ref is not None)
+
+    def to_payload(self) -> dict:
+        return {
+            "ino": self.ino, "chunk_off": self.chunk_off,
+            "version": self.version, "dirty": self.dirty,
+            "deleted": self.deleted,
+            "base_filled": [s.to_payload() for s in self.base_filled],
+            "segments": [s.to_payload() for s in self.segments],
+            "staged": {k: v.to_payload() for k, v in self.staged.items()},
+        }
+
+    @staticmethod
+    def from_payload(p: dict) -> "ChunkState":
+        return ChunkState(
+            ino=p["ino"], chunk_off=p["chunk_off"], version=p["version"],
+            dirty=p["dirty"], deleted=p["deleted"],
+            base_filled=[Segment.from_payload(s) for s in p["base_filled"]],
+            segments=[Segment.from_payload(s) for s in p["segments"]],
+            staged={k: StagedWrite.from_payload(v)
+                    for k, v in p.get("staged", {}).items()})
+
+
+def _subtract(ranges: list[tuple[int, int]],
+              cut: tuple[int, int]) -> list[tuple[int, int]]:
+    out = []
+    c0, c1 = cut
+    for a, b in ranges:
+        if c1 <= a or c0 >= b:
+            out.append((a, b))
+            continue
+        if a < c0:
+            out.append((a, c0))
+        if c1 < b:
+            out.append((c1, b))
+    return out
+
+
+class MetaTable:
+    """Inode metadata owned by one server (a shard of the global namespace)."""
+
+    def __init__(self) -> None:
+        self.inodes: dict[int, InodeMeta] = {}
+
+    def get(self, ino: int) -> InodeMeta | None:
+        return self.inodes.get(ino)
+
+    def put(self, meta: InodeMeta) -> None:
+        self.inodes[meta.ino] = meta
+
+    def evict(self, ino: int) -> None:
+        self.inodes.pop(ino, None)
+
+    def dirty_inos(self) -> list[int]:
+        return [i for i, m in self.inodes.items() if m.dirty]
+
+
+class ChunkTable:
+    def __init__(self) -> None:
+        self.chunks: dict[tuple[int, int], ChunkState] = {}
+
+    def get(self, ino: int, chunk_off: int) -> ChunkState | None:
+        return self.chunks.get((ino, chunk_off))
+
+    def ensure(self, ino: int, chunk_off: int) -> ChunkState:
+        key = (ino, chunk_off)
+        if key not in self.chunks:
+            self.chunks[key] = ChunkState(ino, chunk_off)
+        return self.chunks[key]
+
+    def evict(self, ino: int, chunk_off: int) -> None:
+        self.chunks.pop((ino, chunk_off), None)
+
+    def dirty_keys(self) -> list[tuple[int, int]]:
+        return [k for k, c in self.chunks.items() if c.dirty]
+
+    def for_ino(self, ino: int) -> list[ChunkState]:
+        return [c for (i, _), c in self.chunks.items() if i == ino]

@@ -1,0 +1,103 @@
+"""Transaction tables for the internal 2PC protocol (§4.4–4.5).
+
+Each server keeps:
+
+* a `LockTable` — per-object exclusive locks held by *prepared* transactions;
+  prepare is all-or-nothing and non-blocking (a participant that cannot lock
+  votes no, the coordinator aborts, the client retries), so there are no
+  distributed deadlocks;
+* a `TxTable` — prepared (redo-logged, not yet applied) transactions plus a
+  bounded dedup map of completed transaction results, so a retried RPC series
+  with the same TxId is idempotent (§4.5: "objcache detects a duplicated
+  request [and] replies with old results as done in the Raft RPCs").
+
+Both tables are *derived state*: they are reconstructed from the Raft log on
+replay (PREPARE entries re-acquire locks; COMMIT/ABORT entries release them),
+which is exactly what lets 2PC survive participant crashes (§4.4 last para).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+from .types import Cmd, TxId
+
+
+@dataclass
+class PreparedOp:
+    """One redo-logged object mutation owned by this participant."""
+
+    cmd: Cmd            # TX_PREPARE_META / _CHUNK / _DIR / _NODELIST
+    payload: dict       # full redo image (applied at commit)
+
+
+@dataclass
+class PreparedTx:
+    txid: TxId
+    ops: list[PreparedOp] = field(default_factory=list)
+    locked_keys: list[str] = field(default_factory=list)
+
+
+class LockTable:
+    def __init__(self) -> None:
+        self._locks: dict[str, TxId] = {}
+
+    def try_acquire(self, keys: list[str], txid: TxId) -> bool:
+        """All-or-nothing; re-acquisition by the same TxId succeeds (retry)."""
+        for k in keys:
+            holder = self._locks.get(k)
+            if holder is not None and holder != txid:
+                return False
+        for k in keys:
+            self._locks[k] = txid
+        return True
+
+    def release(self, txid: TxId) -> None:
+        for k in [k for k, h in self._locks.items() if h == txid]:
+            del self._locks[k]
+
+    def holder(self, key: str) -> TxId | None:
+        return self._locks.get(key)
+
+    def held_count(self) -> int:
+        return len(self._locks)
+
+
+class TxTable:
+    """Prepared transactions + completed-result dedup window."""
+
+    DEDUP_WINDOW = 4096
+
+    def __init__(self) -> None:
+        self.prepared: dict[TxId, PreparedTx] = {}
+        self._completed: OrderedDict[tuple, str] = OrderedDict()
+
+    # ---- prepared --------------------------------------------------------------
+    def is_prepared(self, txid: TxId) -> bool:
+        return txid in self.prepared
+
+    def put_prepared(self, tx: PreparedTx) -> None:
+        self.prepared[tx.txid] = tx
+
+    def pop_prepared(self, txid: TxId) -> PreparedTx | None:
+        return self.prepared.pop(txid, None)
+
+    # ---- dedup -----------------------------------------------------------------
+    def record_completed(self, txid: TxId, outcome: str) -> None:
+        key = tuple(txid)
+        self._completed[key] = outcome
+        self._completed.move_to_end(key)
+        while len(self._completed) > self.DEDUP_WINDOW:
+            self._completed.popitem(last=False)
+
+    def completed_outcome(self, txid: TxId) -> str | None:
+        return self._completed.get(tuple(txid))
+
+
+def txid_payload(txid: TxId) -> dict:
+    return {"client_id": txid.client_id, "seq": txid.seq, "txseq": txid.txseq}
+
+
+def txid_from_payload(p: dict) -> TxId:
+    return TxId(p["client_id"], p["seq"], p["txseq"])

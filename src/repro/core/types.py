@@ -1,0 +1,168 @@
+"""Shared core types: inode ids, transaction ids, command enum, errors."""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+ROOT_INODE = 1
+CHUNK_SIZE_DEFAULT = 16 * 1024 * 1024  # paper's 16 MB
+
+
+class TxId(NamedTuple):
+    """§4.5: unique transaction id = (ClientId, SeqNum, TxSeqNum).
+
+    ClientId identifies the transaction client within a FUSE instance;
+    SeqNum is the client's monotonic local clock; TxSeqNum is assigned by the
+    coordinator so retried RPC series reuse the exact same id (idempotency).
+    """
+
+    client_id: int
+    seq: int
+    txseq: int
+
+    def pretty(self) -> str:
+        return f"tx({self.client_id}.{self.seq}.{self.txseq})"
+
+
+class Cmd(enum.IntEnum):
+    """Raft state-machine command ids (paper: 72 variants; we keep the full
+    control set needed by the protocol — prepare/commit/abort per object kind
+    plus FS-level and cluster-level records)."""
+
+    # transaction control
+    TX_PREPARE_META = 1
+    TX_PREPARE_CHUNK = 2
+    TX_PREPARE_DIR = 3
+    TX_PREPARE_NODELIST = 4
+    TX_COMMIT = 5
+    TX_ABORT = 6
+    # coordinator-side durable decisions (2PC recovery, §4.4 last para)
+    TX_COORD_BEGIN = 7
+    TX_COORD_DECIDE_COMMIT = 8
+    TX_COORD_DECIDE_ABORT = 9
+    # single-node fast path (no 2PC; §4.4 "we do not use this protocol for
+    # updates at a single node")
+    LOCAL_META_UPDATE = 10
+    LOCAL_CHUNK_WRITE = 11
+    LOCAL_DIR_UPDATE = 12
+    LOCAL_CHUNK_COMMIT = 13   # single-node fast-path promote of staged writes
+    EVICT_META = 14           # drop clean / migrated-away metadata
+    EVICT_CHUNK = 15
+    # data-path records
+    CHUNK_STAGE = 20          # outstanding write staged to second-level log
+    CHUNK_FILL_FROM_COS = 21  # materialized a chunk range from external storage
+    # persistence (fsync / MPU) records — black dots in Fig. 8
+    MPU_BEGIN_RECORDED = 30
+    MPU_COMMITTED = 31
+    PUT_OBJECT_DONE = 32
+    DIRTY_CLEARED_CHUNK = 33
+    DIRTY_CLEARED_META = 34
+    COS_DELETE_DONE = 35
+    # cluster reconfiguration
+    NODE_JOIN = 40
+    NODE_LEAVE = 41
+    MIGRATE_RECV_META = 42
+    MIGRATE_RECV_CHUNK = 43
+    MIGRATE_RECV_DIR = 44
+    # maintenance
+    SNAPSHOT = 50
+
+
+class Errno(enum.IntEnum):
+    OK = 0
+    ENOENT = 2
+    EIO = 5
+    EEXIST = 17
+    ENOTDIR = 20
+    EISDIR = 21
+    EINVAL = 22
+    ENOSPC = 28
+    ESTALE = 116      # node-list version mismatch (§4.3)
+    ETIMEDOUT = 110
+    ECONFLICT = 125   # lock conflict -> coordinator aborts, client retries
+    ENOTEMPTY = 39
+
+
+class FSError(Exception):
+    def __init__(self, errno: Errno, msg: str = "") -> None:
+        super().__init__(f"{errno.name}: {msg}")
+        self.errno = errno
+
+
+class InodeKind(enum.IntEnum):
+    FILE = 0
+    DIR = 1
+
+
+@dataclass
+class InodeMeta:
+    """On-disk inode metadata (§4.1)."""
+
+    ino: int
+    kind: InodeKind
+    size: int = 0
+    mode: int = 0o644
+    mtime: float = 0.0
+    version: int = 0          # bumped by every committed metadata update;
+    dirty: bool = False       # guards async dirty-clear races (§5.2)
+    deleted: bool = False
+    # mapping to the physical key at external storage (bucket, key); kept in
+    # the in-memory inode in the paper, persisted here for simplicity of replay
+    cos_bucket: str | None = None
+    cos_key: str | None = None
+    # keys that must be deleted from COS at the next persisting transaction
+    # (left behind by rename/unlink, §5.4)
+    cos_old_keys: list[str] = field(default_factory=list)
+    # directories are "special files with child inodes and names" (§4.1)
+    children: dict[str, int] = field(default_factory=dict)
+    nlink: int = 1
+    # lazy COS namespace materialization (§3.2): set once the children of a
+    # directory have been listed from external storage (load-once; §3.3 "does
+    # not automatically check if the current cache is outdated")
+    loaded: bool = False
+
+    def clone(self) -> "InodeMeta":
+        return InodeMeta(
+            ino=self.ino, kind=self.kind, size=self.size, mode=self.mode,
+            mtime=self.mtime, version=self.version, dirty=self.dirty,
+            deleted=self.deleted, cos_bucket=self.cos_bucket,
+            cos_key=self.cos_key, cos_old_keys=list(self.cos_old_keys),
+            children=dict(self.children), nlink=self.nlink,
+            loaded=self.loaded)
+
+    def to_payload(self) -> dict:
+        return {
+            "ino": self.ino, "kind": int(self.kind), "size": self.size,
+            "mode": self.mode, "mtime": self.mtime, "version": self.version,
+            "dirty": self.dirty, "deleted": self.deleted,
+            "cos_bucket": self.cos_bucket, "cos_key": self.cos_key,
+            "cos_old_keys": list(self.cos_old_keys),
+            "children": dict(self.children), "nlink": self.nlink,
+            "loaded": self.loaded,
+        }
+
+    @staticmethod
+    def from_payload(p: dict) -> "InodeMeta":
+        return InodeMeta(
+            ino=p["ino"], kind=InodeKind(p["kind"]), size=p["size"],
+            mode=p["mode"], mtime=p["mtime"], version=p.get("version", 0),
+            dirty=p["dirty"], deleted=p["deleted"],
+            cos_bucket=p.get("cos_bucket"), cos_key=p.get("cos_key"),
+            cos_old_keys=list(p.get("cos_old_keys", [])),
+            children={k: int(v) for k, v in p.get("children", {}).items()},
+            nlink=p.get("nlink", 1), loaded=p.get("loaded", False))
+
+
+def chunk_key(ino: int, chunk_off: int) -> str:
+    """§4.2: chunk 0 shares the metadata hash key (enables the single-
+    participant PutObject fast path, §5.2); other chunks concatenate inode id
+    and offset with '/'."""
+    if chunk_off == 0:
+        return str(ino)
+    return f"{ino}/{chunk_off}"
+
+
+def meta_key(ino: int) -> str:
+    return str(ino)

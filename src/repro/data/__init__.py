@@ -1,0 +1,3 @@
+from .pipeline import TokenPipeline, synth_corpus_to_cos
+
+__all__ = ["TokenPipeline", "synth_corpus_to_cos"]

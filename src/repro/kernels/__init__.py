@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+The paper (a storage-systems paper) has no kernel-level contribution; these
+kernels serve the surrounding training/serving framework per DESIGN.md §7:
+
+* flash_attention — causal GQA + sliding-window attention (hot-spot of 9/10
+  assigned architectures),
+* ssd_scan — Mamba2 chunked state-space-dual scan (mamba2-370m, jamba).
+
+Each has a pure-jnp oracle in ref.py and a jit'd dispatch wrapper in ops.py.
+"""
+
+from .ops import flash_attention, ssd_scan
+
+__all__ = ["flash_attention", "ssd_scan"]

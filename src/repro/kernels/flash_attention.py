@@ -1,0 +1,150 @@
+"""Flash attention Pallas TPU kernel (causal GQA + sliding window).
+
+TPU adaptation notes (vs the CUDA flash-attention the literature assumes):
+
+* tiling is BlockSpec-driven: Q tiles of (block_q, d) stream through VMEM
+  while K/V tiles of (block_k, d) revisit; the MXU consumes (128, d)×(d, 128)
+  matmuls, so block sizes default to 128 and d is the lane dimension;
+* the online-softmax running state (m, l, acc) lives in VMEM scratch and is
+  carried across the *sequential* innermost grid dimension (TPU grids are
+  lexicographically sequential, which replaces the CUDA shared-memory
+  reduction);
+* GQA is expressed in the K/V index_map (query head h reads KV head
+  h // group) — no materialized repeat, no extra HBM traffic;
+* fully-masked (q, k) tiles are skipped with pl.when — with causal masking
+  this halves the work, and with sliding windows it bounds it by
+  O(window · seq).
+
+Layouts: q (BH, Sq, D); k, v (BHkv, Sk, D).  All math float32 in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: int | None,
+               block_q: int, block_k: int, sq: int, sk: int,
+               q_offset: int) -> None:
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute positions of this tile
+    q_lo = qi * block_q + q_offset            # first query abs position
+    k_lo = ki * block_k
+
+    # tile-level relevance: causal keeps k_lo <= q_hi; window keeps
+    # k_hi > q_lo - window
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant &= k_lo <= q_lo + (block_q - 1)
+    if window is not None:
+        relevant &= (k_lo + block_k - 1) > (q_lo - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)      # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)      # (block_k, d)
+        v = v_ref[0].astype(jnp.float32)
+        # zero padded K/V rows: beyond-bounds block tails hold garbage, and
+        # 0 * NaN would poison the p@v accumulation
+        valid_k = (k_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (block_k, 1), 0)) < sk
+        k = jnp.where(valid_k, k, 0.0)
+        v = jnp.where(valid_k, v, 0.0)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                               (block_q, block_k), 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                               (block_q, block_k), 1)
+        mask = cols < sk                       # key tail padding
+        mask &= (rows - q_offset) < sq         # query tail padding
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                    # (block_q, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           scale: float | None = None, q_offset: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    block_q = max(1, min(block_q, sq))
+    block_k = max(1, min(block_k, sk))
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(sk, block_k)
+
+    qr = q.reshape(b * hq, sq, d)
+    kr = k.reshape(b * hkv, sk, d)
+    vr = v.reshape(b * hkv, sk, d)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return ((bh // hq) * hkv + (bh % hq) // group, ki, 0)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, sq=sq, sk=sk, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),      # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),      # running sum l
+            pltpu.VMEM((block_q, d), jnp.float32),      # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, sq, d)

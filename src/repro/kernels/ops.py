@@ -1,0 +1,113 @@
+"""Jit'd kernel wrappers with implementation dispatch.
+
+impl ∈ {"jnp", "pallas", "pallas_interpret"}:
+
+* "jnp"              — the pure-jnp oracle (ref.py).  Used on CPU, in the
+                       multi-pod dry-run (identical math and FLOPs), and as
+                       the backward pass.
+* "pallas"           — the TPU kernel (compiled; target hardware only).
+* "pallas_interpret" — the TPU kernel body executed in Python on CPU;
+                       correctness validation in tests.
+
+Differentiability: the Pallas paths are wrapped in jax.custom_vjp with a
+recompute backward derived from the oracle — forward runs the kernel, the
+backward re-derives gradients from the jnp reference (flash-attention-style
+recompute; the dedicated backward kernels are listed as future work in
+DESIGN.md §Kernels).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .ssd_scan import ssd_scan_pallas
+
+IMPLS = ("jnp", "pallas", "pallas_interpret")
+
+
+# =========================================================================
+# flash attention
+# =========================================================================
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _fa_pallas(q, k, v, causal, window, scale, q_offset, interpret):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale, q_offset=q_offset,
+                                  interpret=interpret)
+
+
+def _fa_fwd(q, k, v, causal, window, scale, q_offset, interpret):
+    out = _fa_pallas(q, k, v, causal, window, scale, q_offset, interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, scale, q_offset, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.flash_attention(
+            q_, k_, v_, causal=causal, window=window, scale=scale,
+            q_offset=q_offset), q, k, v)
+    return vjp(g)
+
+
+_fa_pallas.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None, q_offset: int = 0,
+                    impl: str = "jnp") -> jax.Array:
+    assert impl in IMPLS, impl
+    if impl == "jnp":
+        # short sequences: direct softmax; long: the chunked flash
+        # algorithm in jnp (never materializes the score matrix)
+        if k.shape[2] <= 2048:
+            return ref.flash_attention(q, k, v, causal=causal,
+                                       window=window, scale=scale,
+                                       q_offset=q_offset)
+        return ref.flash_attention_chunked(q, k, v, causal=causal,
+                                           window=window, scale=scale,
+                                           q_offset=q_offset)
+    return _fa_pallas(q, k, v, causal, window, scale, q_offset,
+                      impl == "pallas_interpret")
+
+
+# =========================================================================
+# SSD scan
+# =========================================================================
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _ssd_pallas(x, loga, b, c, chunk, interpret):
+    return ssd_scan_pallas(x, loga, b, c, chunk=chunk, interpret=interpret)
+
+
+def _ssd_fwd(x, loga, b, c, chunk, interpret):
+    out = _ssd_pallas(x, loga, b, c, chunk, interpret)
+    return out, (x, loga, b, c)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    x, loga, b, c = res
+    _, vjp = jax.vjp(lambda x_, l_, b_, c_: ref.ssd_scan(x_, l_, b_, c_),
+                     x, loga, b, c)
+    return vjp(g)
+
+
+_ssd_pallas.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd_scan(x: jax.Array, loga: jax.Array, b: jax.Array, c: jax.Array, *,
+             chunk: int = 128, impl: str = "jnp"
+             ) -> tuple[jax.Array, jax.Array]:
+    assert impl in IMPLS, impl
+    if impl == "jnp":
+        # chunked SSD (same block decomposition as the kernel): the naive
+        # time scan saves S per-step states for backward
+        if x.shape[1] % max(1, min(chunk, x.shape[1])) == 0:
+            return ref.ssd_scan_chunked(x, loga, b, c,
+                                        chunk=min(chunk, x.shape[1]))
+        return ref.ssd_scan(x, loga, b, c)
+    return _ssd_pallas(x, loga, b, c, chunk, impl == "pallas_interpret")

@@ -1,0 +1,188 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic ground truth: every kernel sweep in
+tests/test_kernels.py asserts allclose against these, and they double as the
+`impl="jnp"` execution path used on CPU (dry-run) and for backward passes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None, q_offset: int = 0
+                    ) -> jax.Array:
+    """Multi-head attention with GQA, causal masking and optional sliding
+    window.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) with Hq % Hkv == 0.
+    `q_offset` places query i at absolute position i + q_offset (decode with
+    a KV cache).  window = W keeps keys j with  pos_i - W < j <= pos_i.
+    Returns (B, Hq, Sq, D) in q.dtype; math in float32.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    pos_q = jnp.arange(sq) + q_offset
+    pos_k = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= pos_k[None, :] <= pos_q[:, None]
+    if window is not None:
+        mask &= pos_k[None, :] > pos_q[:, None] - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (can happen with tiny windows) produce uniform
+    # garbage from softmax; zero them like the kernel does
+    any_valid = mask.any(axis=-1)[None, None, :, None]
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    out = jnp.where(any_valid, out, 0.0)
+    return out.astype(q.dtype)
+
+
+def flash_attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            causal: bool = True, window: int | None = None,
+                            scale: float | None = None, q_offset: int = 0,
+                            block_k: int = 512) -> jax.Array:
+    """Flash-attention algorithm in pure jnp: lax.scan over key blocks with
+    a running (m, l, acc) online softmax.  Mathematically identical to
+    `flash_attention` but never materializes the (Sq, Sk) score matrix —
+    this is the jnp execution path for long sequences (the XLA analogue of
+    the Pallas kernel's VMEM tiling; §Perf#8)."""
+    bsz, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    if sk % block_k:
+        pad = block_k - sk % block_k
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = k.shape[2] // block_k
+    qf = q.reshape(bsz, hkv, group * sq, d).astype(jnp.float32)
+    kb = jnp.moveaxis(k.reshape(bsz, hkv, nk, block_k, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(bsz, hkv, nk, block_k, d), 2, 0)
+    pos_q = jnp.tile(jnp.arange(sq) + q_offset, group)      # grouped rows
+
+    def body(carry, inp):
+        m, l, acc, ki = carry[0], carry[1], carry[2], carry[3]
+        kblk, vblk = inp
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kblk.astype(jnp.float32)) \
+            * scale
+        pos_k = ki * block_k + jnp.arange(block_k)
+        mask = pos_k[None, :] < sk
+        if causal:
+            mask &= pos_k[None, :] <= pos_q[:, None]
+        if window is not None:
+            mask &= pos_k[None, :] > pos_q[:, None] - window
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        # bf16 probabilities for the PV matmul (f32 accumulation): halves
+        # the dominant transient of long prefills
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(v.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc, ki + 1), None
+
+    m0 = jnp.full((bsz, hkv, group * sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((bsz, hkv, group * sq), jnp.float32)
+    a0 = jnp.zeros((bsz, hkv, group * sq, d), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, jnp.int32(0)),
+                                     (kb, vb))
+    out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+    out = jnp.where((l == 0.0)[..., None], 0.0, out)
+    return out.reshape(bsz, hq, sq, d).astype(q.dtype)
+
+
+def ssd_scan(x: jax.Array, loga: jax.Array, b: jax.Array, c: jax.Array,
+             h0: jax.Array | None = None
+             ) -> tuple[jax.Array, jax.Array]:
+    """Mamba2 SSD recurrence (state-space dual form), naive time scan.
+
+    x:    (B, S, H, P)   per-head inputs
+    loga: (B, S, H)      log decay  (log a_t, a_t in (0,1])
+    b:    (B, S, H, N)   input projection onto the state
+    c:    (B, S, H, N)   state readout
+    h0:   (B, H, N, P)   optional initial state
+
+    Recurrence:  h_t = a_t * h_{t-1} + b_t ⊗ x_t ;   y_t = c_t · h_t.
+    Returns (y (B,S,H,P) in x.dtype, h_final (B,H,N,P) float32).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    af = jnp.exp(loga.astype(jnp.float32))
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(h, inp):
+        x_t, a_t, b_t, c_t = inp       # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        h = a_t[..., None, None] * h + jnp.einsum("bhn,bhp->bhnp", b_t, x_t)
+        y = jnp.einsum("bhn,bhnp->bhp", c_t, h)
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(af, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)         # (B,S,H,P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_scan_chunked(x: jax.Array, loga: jax.Array, b: jax.Array,
+                     c: jax.Array, chunk: int = 128
+                     ) -> tuple[jax.Array, jax.Array]:
+    """SSD block decomposition in pure jnp (same math as the Pallas
+    kernel): intra-chunk work is batched matmuls; the inter-chunk scan
+    carries only the (B,H,N,P) state per chunk boundary — the per-timestep
+    scan saved S× that for backward (592 GiB/dev for jamba train_4k,
+    §Perf#8)."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    chunk = max(1, min(chunk, S))
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    xf = x.astype(jnp.float32).reshape(B, nc, chunk, H, P)
+    lf = loga.astype(jnp.float32).reshape(B, nc, chunk, H)
+    bf = b.astype(jnp.float32).reshape(B, nc, chunk, H, N)
+    cf = c.astype(jnp.float32).reshape(B, nc, chunk, H, N)
+
+    li = jnp.arange(chunk)
+    causal = (li[None, :] <= li[:, None])[None, None]   # (1,1,L,L)
+
+    def body(h, inp):
+        xc, lc, bc, cc = inp      # (B,L,H,P), (B,L,H), (B,L,H,N), (B,L,H,N)
+        cum = jnp.cumsum(lc, axis=1)                    # (B,L,H)
+        total = cum[:, -1]                              # (B,H)
+        gmat = jnp.einsum("blhn,bmhn->bhlm", cc, bc)    # (B,H,L,L)
+        decay = jnp.exp(cum[:, :, None] - cum[:, None]
+                        ).transpose(0, 3, 1, 2)          # (B,H,L,L)
+        y = jnp.einsum("bhlm,bmhp->blhp", gmat * jnp.where(causal, decay,
+                                                           0.0), xc)
+        y += jnp.einsum("blhn,blh,bhnp->blhp", cc, jnp.exp(cum), h)
+        w = jnp.exp(total[:, None] - cum)               # (B,L,H)
+        h_new = jnp.exp(total)[..., None, None] * h \
+            + jnp.einsum("blhn,blh,blhp->bhnp", bc, w, xc)
+        return h_new, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    per_chunk = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(lf, 1, 0),
+                 jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    h_final, ys = jax.lax.scan(jax.checkpoint(body), h0, per_chunk)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    return y.astype(x.dtype), h_final

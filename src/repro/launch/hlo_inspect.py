@@ -1,0 +1,71 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Profile substitute: list the largest collectives / ops in a compiled cell.
+
+    PYTHONPATH=src python -m repro.launch.hlo_inspect --arch granite-8b \
+        --shape decode_32k [--top 15]
+"""
+
+import argparse
+import re
+import sys
+
+from ..configs import ARCH_IDS, SHAPES
+from .dryrun import _DTYPE_BYTES, _SHAPE_RE, lower_cell
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def shape_bytes(text: str) -> int:
+    n = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        k = 1
+        for d in dims.split(","):
+            if d:
+                k *= int(d)
+        n += k * _DTYPE_BYTES[dt]
+    return n
+
+
+def inspect(hlo: str, top: int = 15) -> list[tuple[int, str, str]]:
+    rows = []
+    for line in hlo.splitlines():
+        ls = line.strip()
+        if not (ls.startswith("%") or ls.startswith("ROOT")):
+            continue
+        body = ls.split(" = ", 1)
+        if len(body) != 2:
+            continue
+        m = _COLL_RE.search(body[1])
+        if not m:
+            continue
+        out_bytes = shape_bytes(body[1].split(m.group(1))[0])
+        rows.append((out_bytes, m.group(1), ls[:240]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", choices=tuple(SHAPES), required=True)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--scan", action="store_true", default=True)
+    args = ap.parse_args()
+    out = lower_cell(args.arch, args.shape, multi_pod=False)
+    lowered = out[0]
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    for nbytes, kind, line in inspect(hlo, args.top):
+        print(f"{nbytes / 2**20:10.1f} MiB  {kind:18s} {line[:170]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,121 @@
+"""ShapeDtypeStruct stand-ins + sharding trees for every (arch × shape) cell.
+
+`input_specs(cfg, shape)` returns the abstract inputs the step function of
+that cell consumes — weak-type-correct, shardable, no device allocation:
+
+* train:   {tokens (B, S) i32, labels (B, S) i32 [, frontend]}
+* prefill: {tokens (B, S) i32 [, frontend]}
+* decode:  (token (B, 1) i32, cache pytree, cache_len scalar i32)
+
+`abstract_state` eval-shapes the model init (+ optimizer) without
+allocating, and `shardings_for_*` resolve the in/out sharding trees.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import Model, build_model
+from ..models.config import ArchConfig, ShapeConfig
+from ..models.lm import frontend_dim
+from ..optim import adamw_init
+from ..parallel import (ShardingRules, batch_pspec, cache_pspec,
+                        default_rules, param_shardings, zero1_shardings)
+from ..train.steps import TrainState
+
+
+def text_len(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """Frontend stubs occupy positions: text length excludes them so the
+    total sequence matches the cell's seq_len."""
+    if cfg.frontend == "patch":
+        return shape.seq_len - cfg.n_frontend_tokens
+    return shape.seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, model: Model | None = None
+                ) -> dict:
+    model = model or build_model(cfg)
+    b = shape.global_batch
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        s = text_len(cfg, shape)
+        specs = {"tokens": sd((b, s), jnp.int32),
+                 "labels": sd((b, s), jnp.int32)}
+        if cfg.frontend is not None:
+            nf = cfg.enc_seq if cfg.family == "audio" \
+                else cfg.n_frontend_tokens
+            specs["frontend"] = sd((b, nf, frontend_dim(cfg)), jnp.float32)
+        return specs
+    if shape.kind == "prefill":
+        s = text_len(cfg, shape)
+        specs = {"tokens": sd((b, s), jnp.int32)}
+        if cfg.frontend is not None:
+            nf = cfg.enc_seq if cfg.family == "audio" \
+                else cfg.n_frontend_tokens
+            specs["frontend"] = sd((b, nf, frontend_dim(cfg)), jnp.float32)
+        return specs
+    # decode: one new token against a cache of seq_len
+    return {
+        "token": sd((b, 1), jnp.int32),
+        "cache": model.cache_spec(b, shape.seq_len),
+        "cache_len": sd((), jnp.int32),
+    }
+
+
+def abstract_state(model: Model, max_seq: int, with_opt: bool = True
+                   ) -> tuple[TrainState | dict, dict]:
+    """Eval-shape the params (+ optimizer) — no allocation.  Returns
+    (abstract state or params, logical spec tree)."""
+    holder = {}
+
+    def init_only(key):
+        p, s = model.init(key, max_seq=max_seq)
+        holder["spec"] = s
+        return p
+
+    params = jax.eval_shape(init_only, jax.random.PRNGKey(0))
+    spec = holder["spec"]
+    if not with_opt:
+        return params, spec
+    opt = jax.eval_shape(adamw_init, params)
+    state = TrainState(params=params, opt=opt,
+                       step=jax.ShapeDtypeStruct((), jnp.int32))
+    return state, spec
+
+
+def shardings_for_state(state: TrainState, spec, mesh: Mesh,
+                        rules: ShardingRules) -> TrainState:
+    p_sh = param_shardings(spec, state.params, mesh, rules)
+    z_sh = lambda tree: zero1_shardings(spec, tree, mesh, rules)
+    opt_sh = {
+        "master": z_sh(state.opt["master"]),
+        "m": z_sh(state.opt["m"]),
+        "v": z_sh(state.opt["v"]),
+        "step": NamedSharding(mesh, P()),
+    }
+    return TrainState(params=p_sh, opt=opt_sh,
+                      step=NamedSharding(mesh, P()))
+
+
+def shardings_for_batch(specs: dict, mesh: Mesh, rules: ShardingRules
+                        ) -> dict:
+    return {k: NamedSharding(mesh, batch_pspec(v.shape, mesh, rules))
+            for k, v in specs.items()}
+
+
+def shardings_for_decode(specs: dict, mesh: Mesh, rules: ShardingRules
+                         ) -> dict:
+    def one(path_leaf):
+        shp = path_leaf.shape
+        if len(shp) >= 4:   # cache leaves (L, B, H, S, D) / (L, B, ...)
+            return NamedSharding(mesh, cache_pspec(shp, mesh, rules))
+        if len(shp) == 2:   # token (B, 1)
+            return NamedSharding(mesh, batch_pspec(shp, mesh, rules))
+        return NamedSharding(mesh, P())
+    return {
+        "token": one(specs["token"]),
+        "cache": jax.tree.map(one, specs["cache"]),
+        "cache_len": NamedSharding(mesh, P()),
+    }

@@ -1,0 +1,151 @@
+"""Mamba2 block (SSD — state-space duality), per arXiv:2405.21060.
+
+Projection layout per block (d_in = expand * d_model, H = d_in / head_dim):
+
+  in_proj: d -> [z (d_in), x (d_in), B (d_state), C (d_state), dt (H)]
+  conv1d : short causal depthwise conv over the (x, B, C) channels
+  SSD    : h_t = a_t h_{t-1} + b_t ⊗ x_t,  y_t = c_t · h_t,
+           a_t = exp(-softplus(dt_t + dt_bias) * exp(A_log))
+  skip   : y += D ⊙ x ;  gate: y ⊙ silu(z); RMSNorm; out_proj.
+
+B/C use a single group shared across heads (broadcast before the kernel).
+The chunked scan runs through repro.kernels.ssd_scan (Pallas on TPU, jnp
+oracle elsewhere); decode keeps (conv_state, ssm_state) caches and runs the
+O(1) recurrence step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .config import ArchConfig
+from .layers import _dtype, _init_dense, rmsnorm, rmsnorm_init, rmsnorm_spec
+
+
+def _dims(cfg: ArchConfig) -> tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return d_in, n_heads, s.d_state, s.head_dim
+
+
+def mamba2_init(key, cfg: ArchConfig) -> tuple[dict, dict]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, n, p_dim = _dims(cfg)
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    conv_ch = d_in + 2 * n
+    p = {
+        "in_proj": _init_dense(ks[0], d, 2 * d_in + 2 * n + nh, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_ch), jnp.float32)
+                   * (s.d_conv ** -0.5)).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 1e-2))
+                           ).astype(jnp.float32),
+        "norm": rmsnorm_init(d_in, dt),
+        "out_proj": _init_dense(ks[2], d_in, d, dt,
+                                scale=d_in ** -0.5
+                                / (2 * cfg.n_layers) ** 0.5),
+    }
+    spec = {
+        "in_proj": ("embed", "ff"),
+        "conv_w": (None, "ff"),
+        "conv_b": ("ff",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": rmsnorm_spec(),
+        "out_proj": ("ff", "embed"),
+    }
+    return p, spec
+
+
+def _split_proj(cfg: ArchConfig, proj: jax.Array):
+    d_in, nh, n, _ = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [d_in + 2 * n], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def mamba2_apply(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Full-sequence (train / prefill) path.  x: (B, S, D)."""
+    s_cfg = cfg.ssm
+    bsz, seq, _ = x.shape
+    d_in, nh, n, p_dim = _dims(cfg)
+    proj = x @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs, b_in, c_in = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])                   # (B, S, H)
+    loga = -jnp.exp(params["A_log"])[None, None, :] * dt        # (B, S, H)
+    xh = xs.reshape(bsz, seq, nh, p_dim)
+    # single B/C group broadcast to every head, scaled by dt (ZOH discretize)
+    bh = b_in[:, :, None, :] * dt[..., None]
+    bh = jnp.broadcast_to(bh, (bsz, seq, nh, n)).astype(x.dtype)
+    ch = jnp.broadcast_to(c_in[:, :, None, :],
+                          (bsz, seq, nh, n)).astype(x.dtype)
+    pad = (-seq) % s_cfg.chunk
+    if pad and cfg.attn_impl != "jnp":
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        bh = jnp.pad(bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ch = jnp.pad(ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, _ = kops.ssd_scan(xh, loga, bh, ch, chunk=s_cfg.chunk,
+                         impl=cfg.attn_impl)
+    y = y[:, :seq]
+    y = (y + params["D"][None, None, :, None] * xh[:, :seq]).astype(x.dtype)
+    y = y.reshape(bsz, seq, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return y @ params["out_proj"]
+
+
+def mamba2_decode(params: dict, x: jax.Array, cfg: ArchConfig,
+                  conv_state: jax.Array, ssm_state: jax.Array
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode.  x (B, 1, D); conv_state (B, K-1, C);
+    ssm_state (B, H, N, P) float32.  O(1) per step."""
+    bsz = x.shape[0]
+    d_in, nh, n, p_dim = _dims(cfg)
+    proj = x @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    new_conv = jnp.concatenate([conv_state[:, 1:], xbc.astype(
+        conv_state.dtype)], axis=1) if params["conv_w"].shape[0] > 1 \
+        else conv_state
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                       state=conv_state)
+    xs, b_in, c_in = jnp.split(xbc[:, 0], [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"])                   # (B, H)
+    a = jnp.exp(-jnp.exp(params["A_log"])[None, :] * dt)        # (B, H)
+    xh = xs.reshape(bsz, nh, p_dim).astype(jnp.float32)
+    bh = (b_in[:, None, :] * dt[..., None]).astype(jnp.float32)  # (B, H, N)
+    ch = jnp.broadcast_to(c_in[:, None, :], (bsz, nh, n)
+                          ).astype(jnp.float32)
+    h = a[..., None, None] * ssm_state + jnp.einsum("bhn,bhp->bhnp", bh, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", ch, h)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return y @ params["out_proj"], new_conv, h

@@ -1,0 +1,6 @@
+from .sharding import (ShardingRules, batch_pspec, cache_pspec,
+                       default_rules, param_shardings, pspec_for,
+                       zero1_shardings)
+
+__all__ = ["ShardingRules", "batch_pspec", "cache_pspec", "default_rules",
+           "param_shardings", "pspec_for", "zero1_shardings"]

@@ -1,0 +1,77 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launcher installs the mesh axis names (and
+sizes, for divisibility checks) here, and layers pin hot activations with
+`shard_batch(x)` / `shard_spec(x, ...)`.  When unset (unit tests,
+single-device runs) everything no-ops.
+
+Why explicit constraints: GSPMD's propagation handles matmuls well but is
+conservative around scatter/gather — the MoE dispatch buffer was replicated
+(343 GiB/dev temp, 576 GiB/dev collectives) until pinned to the batch axes
+(§Perf#3b).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: tuple | None = None
+_MODEL_AXES: tuple | None = None
+_SIZES: dict[str, int] = {}
+
+
+def set_axes(batch_axes: tuple | None, model_axes: tuple | None = None,
+             sizes: dict[str, int] | None = None) -> None:
+    global _BATCH_AXES, _MODEL_AXES, _SIZES
+    _BATCH_AXES = tuple(batch_axes) if batch_axes else None
+    _MODEL_AXES = tuple(model_axes) if model_axes else None
+    _SIZES = dict(sizes or {})
+
+
+def set_from_mesh(mesh, rules) -> None:
+    set_axes(rules.batch_axes, rules.model_axes,
+             {a: mesh.shape[a] for a in mesh.axis_names})
+
+
+def clear() -> None:
+    set_axes(None, None, None)
+
+
+def batch_axes() -> tuple | None:
+    return _BATCH_AXES
+
+
+def _size(axes: tuple) -> int:
+    return math.prod(_SIZES.get(a, 1) for a in axes)
+
+
+def _norm(ax: tuple):
+    return ax if len(ax) > 1 else ax[0]
+
+
+def shard_batch(x: jax.Array, batch_dim: int = 0) -> jax.Array:
+    """Pin dim `batch_dim` to the batch axes, rest replicated."""
+    if _BATCH_AXES is None or x.shape[batch_dim] % _size(_BATCH_AXES):
+        return x
+    parts: list = [None] * x.ndim
+    parts[batch_dim] = _norm(_BATCH_AXES)
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+def shard_spec(x: jax.Array, *dims: str | None) -> jax.Array:
+    """Pin dims by role: "batch" | "model" | None per dimension."""
+    if _BATCH_AXES is None:
+        return x
+    parts: list = []
+    for dim, role in zip(x.shape, dims):
+        if role == "batch" and dim % _size(_BATCH_AXES) == 0:
+            parts.append(_norm(_BATCH_AXES))
+        elif role == "model" and _MODEL_AXES \
+                and dim % _size(_MODEL_AXES) == 0:
+            parts.append(_norm(_MODEL_AXES))
+        else:
+            parts.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*parts))

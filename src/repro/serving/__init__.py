@@ -1,0 +1,3 @@
+from .engine import ModelStore, ServingEngine
+
+__all__ = ["ModelStore", "ServingEngine"]

@@ -1,0 +1,111 @@
+"""Train / prefill / decode step factories — the functions the launcher
+jits with explicit in/out shardings and the dry-run lowers.
+
+`train_step(state, batch)` computes loss + grads (bf16 compute), applies
+AdamW on fp32 masters (ZeRO-1 sharded), and returns the new state with bf16
+params re-cast from the masters.  `decode_step` is the serve_step that the
+decode-shape dry-run cells lower (one new token against a full KV cache).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import Model
+from ..optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: dict
+    step: jax.Array
+
+    def tree_flatten(self):  # pragma: no cover - registered below
+        return (self.params, self.opt, self.step), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.step), None),
+    lambda _, xs: TrainState(params=xs[0], opt=xs[1], step=xs[2]))
+
+
+def train_state_init(model: Model, key, max_seq: int = 4096
+                     ) -> tuple[TrainState, dict]:
+    params, spec = model.init(key, max_seq=max_seq)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32)), spec
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    grad_shardings=None, accum_steps: int = 1,
+                    reduce_dtype: str | None = None
+                    ) -> Callable[[TrainState, dict], tuple[TrainState,
+                                                            dict]]:
+    """grad_shardings: optional NamedSharding tree (the ZeRO-1 optimizer
+    shardings).  Constraining the gradients to the optimizer-shard layout
+    makes XLA lower the cross-data reduction as reduce-scatter into the
+    shards instead of a full all-reduce (§Perf#4).  accum_steps > 1 splits
+    the global batch into microbatches (§Perf#7: activation memory).
+    reduce_dtype="bfloat16" compresses gradients before the cross-data
+    reduction (halves DCN/ICI gradient traffic; the fp32 AdamW update is
+    unchanged — standard large-scale trade-off)."""
+    def grad_fn(params, batch):
+        return jax.value_and_grad(model.loss)(params, batch)
+
+    def train_step(state: TrainState, batch: dict
+                   ) -> tuple[TrainState, dict]:
+        if accum_steps <= 1:
+            loss, grads = grad_fn(state.params, batch)
+        else:
+            # gradient accumulation: activation memory scales with the
+            # microbatch while the optimizer sees the full global batch
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                loss_sum, gsum = carry
+                l, g = grad_fn(state.params, mb)
+                return (loss_sum + l,
+                        jax.tree.map(jnp.add, gsum, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        if reduce_dtype is not None:
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.dtype(reduce_dtype)), grads)
+        if grad_shardings is not None:
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, grad_shardings)
+        new_master, new_opt, metrics = adamw_update(opt_cfg, grads,
+                                                    state.opt)
+        # recast masters to the compute dtypes of the live params
+        new_params = jax.tree.map(lambda m, p: m.astype(p.dtype),
+                                  new_master, state.params)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1), metrics
+    return train_step
+
+
+def make_prefill_step(model: Model) -> Callable[[Any, dict], jax.Array]:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, token, cache, cache_len):
+        return model.decode(params, token, cache, cache_len)
+    return decode_step

@@ -1,0 +1,44 @@
+import shutil
+import tempfile
+
+import pytest
+
+from repro.core import (BucketMount, ClientConfig, Cluster, ObjcacheClient,
+                        ObjcacheFS, ServerConfig)
+
+CHUNK = 256 * 1024   # small chunks so multi-chunk paths trigger quickly
+
+
+@pytest.fixture()
+def workdir():
+    d = tempfile.mkdtemp(prefix="objcache-test-")
+    yield d
+    shutil.rmtree(d, ignore_errors=True)
+
+
+def make_cluster(workdir, n=3, chunk=CHUNK, buckets=None):
+    cfg = ServerConfig(chunk_size=chunk)
+    cl = Cluster(workdir, buckets or [BucketMount("b", "b")], cfg=cfg)
+    cl.start(n)
+    return cl
+
+
+def make_fs(cl, consistency="strict", deployment="detached", node=None):
+    client = ObjcacheClient(cl.router, cl.clock,
+                            node or cl.node_list()[0],
+                            ClientConfig(consistency=consistency,
+                                         deployment=deployment),
+                            chunk_size=cl.cfg.chunk_size)
+    return ObjcacheFS(client)
+
+
+@pytest.fixture()
+def cluster(workdir):
+    cl = make_cluster(workdir)
+    yield cl
+    cl.close()
+
+
+@pytest.fixture()
+def fs(cluster):
+    return make_fs(cluster)

@@ -1,0 +1,36 @@
+"""Integration: the multi-pod dry-run pipeline end-to-end for one fast cell
+(subprocess — the 512-device XLA flag must precede jax init)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("cell", [("whisper-tiny", "train_4k"),
+                                  ("mamba2-370m", "decode_32k")])
+def test_dryrun_cell_compiles_and_reports(cell, tmp_path):
+    arch, shape = cell
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=420)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "ALL CELLS PASSED" in proc.stdout
+    rec_path = os.path.join(REPO, "reports", "dryrun",
+                            f"{arch}__{shape}__16x16.json")
+    rec = json.load(open(rec_path))
+    pd = rec["per_device"]
+    assert pd["flops"] > 0
+    assert pd["bytes_accessed"] > 0
+    assert rec["n_devices"] == 256          # 16x16 of the 512 placeholders
+    # per-device memory must fit a 16 GB v5e
+    assert pd["argument_bytes"] + pd["temp_bytes"] < 15.9 * 2**30, \
+        (pd["argument_bytes"] / 2**30, pd["temp_bytes"] / 2**30)

