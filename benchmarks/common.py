@@ -55,3 +55,16 @@ def save_report(name: str, payload: dict) -> str:
 
 def mbps(nbytes: int, seconds: float) -> float:
     return nbytes / max(seconds, 1e-9) / 1e6
+
+
+def rpc_summary(cl: Cluster, top: int = 8) -> dict:
+    """Per-method RPC fabric stats from the typed dispatch table, for the
+    benchmark reports: calls, megabytes on the wire, summed virtual-time
+    latency — the `top` busiest methods by call count."""
+    rows = sorted(cl.rpc_stats().items(), key=lambda kv: -kv[1]["calls"])
+    return {m: {"calls": int(v["calls"]),
+                "mbytes": round(v["bytes"] / 1e6, 3),
+                "vtime_s": round(v["vtime"], 6),
+                "timeouts": int(v["timeouts"]),
+                "errors": int(v["errors"])}
+            for m, v in rows[:top]}

@@ -13,7 +13,7 @@ import tempfile
 
 import numpy as np
 
-from .common import blob, make_cluster, make_fs, save_report
+from .common import blob, make_cluster, make_fs, rpc_summary, save_report
 
 N_NODES = 12
 N_FILES = 128
@@ -58,6 +58,8 @@ def run(quiet: bool = False) -> dict:
         downs.append(st.duration)
     rep["scale_down_dirty_s"] = downs
     rep["zero_scale_last_s"] = downs[-1]
+    # migration/persist traffic breakdown from the typed RPC fabric
+    rep["rpc_methods"] = rpc_summary(cl)
     cl.close()
     shutil.rmtree(wd, ignore_errors=True)
 

@@ -12,7 +12,7 @@ import tempfile
 from repro.baselines import S3FSConfig, S3FSLike
 
 from .common import CHUNK, FILE_MB, blob, make_cluster, make_fs, mbps, \
-    save_report
+    rpc_summary, save_report
 
 BLOCK = 128 * 1024
 
@@ -74,8 +74,14 @@ def run(quiet: bool = False) -> dict:
             rep["objcache_node_mbps"] / rep["s3fs_cold_mbps"] - 1)
         rep["miss_vs_s3fs_pct"] = 100 * (
             rep["objcache_miss_mbps"] / rep["s3fs_cold_mbps"] - 1)
+        rep["rpc_methods"] = rpc_summary(cl)
         save_report("fig9_fio_seqread", rep)
         if not quiet:
+            busiest = next(iter(rep["rpc_methods"]), None)
+            if busiest:
+                b = rep["rpc_methods"][busiest]
+                print(f"[fig9] busiest rpc: {busiest} x{b['calls']} "
+                      f"({b['mbytes']:.1f} MB, {b['vtime_s']:.3f}s vtime)")
             print(f"[fig9] s3fs {rep['s3fs_cold_mbps']:8.1f} MB/s | "
                   f"miss {rep['objcache_miss_mbps']:8.1f} "
                   f"({rep['miss_vs_s3fs_pct']:+.0f}%) | "

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# One-shot pre-commit gate: byte-compile everything, then run the tier-1
+# test suite (pyproject's addopts already excludes `slow` JAX smoke tests;
+# run those with `pytest -m slow` when touching kernels/models).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== compileall =="
+python -m compileall -q src benchmarks tests
+
+echo "== tier-1 pytest =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

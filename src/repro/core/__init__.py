@@ -5,25 +5,36 @@ Public surface::
     from repro.core import (Cluster, BucketMount, ObjcacheClient, ObjcacheFS,
                             ClientConfig, ServerConfig, CosStore, SimClock,
                             HardwareModel)
+
+The server side is layered (see ARCHITECTURE.md): `ServerState` is the
+shared state seam, and `Participant` / `Coordinator` / `Persister` /
+`Migrator` are the subsystems the `CacheServer` façade wires together.
 """
 
 from .client import ClientConfig, ObjcacheClient
 from .cluster import Cluster, ScaleStats
+from .coordinator import Coordinator
 from .cos import CosError, CosStore
 from .fs import ObjcacheFS
 from .hashring import HashRing
-from .net import Router, SimCrash, SimTimeout
+from .migration import Migrator
+from .net import (Router, RpcSpec, SimCrash, SimTimeout, UnknownRpcError,
+                  rpc_handler)
+from .participant import Participant
+from .persist import Persister
 from .raftlog import ChecksumError, RaftLog
-from .server import BucketMount, CacheServer, ServerConfig
+from .server import BucketMount, CacheServer, NODELIST_KEY, ServerConfig
 from .simclock import HardwareModel, Resource, SimClock
+from .state import ServerState
 from .types import (CHUNK_SIZE_DEFAULT, Cmd, Errno, FSError, InodeKind,
                     InodeMeta, ROOT_INODE, TxId)
 
 __all__ = [
     "BucketMount", "CHUNK_SIZE_DEFAULT", "CacheServer", "ChecksumError",
-    "ClientConfig", "Cluster", "Cmd", "CosError", "CosStore", "Errno",
-    "FSError", "HardwareModel", "HashRing", "InodeKind", "InodeMeta",
-    "ObjcacheClient", "ObjcacheFS", "ROOT_INODE", "Resource", "Router",
-    "RaftLog", "ScaleStats", "ServerConfig", "SimClock", "SimCrash",
-    "SimTimeout", "TxId",
+    "ClientConfig", "Cluster", "Cmd", "Coordinator", "CosError", "CosStore",
+    "Errno", "FSError", "HardwareModel", "HashRing", "InodeKind", "InodeMeta",
+    "Migrator", "NODELIST_KEY", "ObjcacheClient", "ObjcacheFS", "Participant",
+    "Persister", "ROOT_INODE", "Resource", "Router", "RaftLog", "RpcSpec",
+    "ScaleStats", "ServerConfig", "ServerState", "SimClock", "SimCrash",
+    "SimTimeout", "TxId", "UnknownRpcError", "rpc_handler",
 ]

@@ -119,9 +119,10 @@ class ObjcacheClient:
                 continue
         raise FSError(Errno.ETIMEDOUT, "no reachable server for node list")
 
-    def _rpc(self, dst: str, method: str, *, nbytes_out: int = 256,
-             nbytes_in: int = 256, **kw):
-        """RPC with ESTALE pull-and-retry and timeout retries (same TxId)."""
+    def _rpc(self, dst: str, method: str, *, nbytes_out: int | None = None,
+             nbytes_in: int | None = None, **kw):
+        """RPC with ESTALE pull-and-retry and timeout retries (same TxId).
+        Payload sizes default to the handler's declared RpcSpec."""
         last: Exception | None = None
         for _ in range(self.cfg.max_retries):
             try:
@@ -309,7 +310,32 @@ class ObjcacheClient:
     def write_chunks(self, ino: int, off: int, data: bytes, seq: int
                      ) -> list[tuple[int, list[str]]]:
         """§5.3: transfer chunk updates directly to participants, outside any
-        metadata lock.  Returns [(chunk_off, [stage_ids])] for the flush."""
+        metadata lock.  Returns [(chunk_off, [stage_ids])] for the flush.
+
+        A ring change under the write (ESTALE, or a migration read-only
+        window) re-pulls the node list and re-stages *every* part: staged
+        entries are not migrated, so a partial re-stage could strand stage
+        ids on old owners and the flush would silently promote nothing."""
+        for attempt in range(self.cfg.max_retries):
+            try:
+                return self._stage_parts(ino, off, data, seq)
+            except FSError as e:
+                if e.errno not in (Errno.ESTALE, Errno.ECONFLICT) or \
+                        attempt == self.cfg.max_retries - 1:
+                    raise
+                self.clock.sleep(0.001)
+                self._pull_node_list()
+            except (SimTimeout, SimCrash):
+                # stale ring naming a departed/dead owner: same recovery as
+                # the metadata paths in _rpc
+                if attempt == self.cfg.max_retries - 1:
+                    raise
+                self.clock.sleep(self.router.timeout_s)
+                self._pull_node_list()
+        raise AssertionError("unreachable")  # pragma: no cover
+
+    def _stage_parts(self, ino: int, off: int, data: bytes, seq: int
+                     ) -> list[tuple[int, list[str]]]:
         cs = self.chunk_size
         staged: dict[int, list[str]] = {}
         pos = 0

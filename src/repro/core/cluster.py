@@ -349,6 +349,11 @@ class Cluster:
         chunks = sum(len(s.chunks.dirty_keys()) for s in self.servers.values())
         return {"dirty_metas": metas, "dirty_chunks": chunks}
 
+    def rpc_stats(self) -> dict[str, dict[str, float]]:
+        """Per-method RPC fabric stats (calls / bytes / vtime / timeouts)
+        aggregated by the typed dispatch table in the router."""
+        return {m: dict(v) for m, v in sorted(self.router.method_stats.items())}
+
     def close(self) -> None:
         for s in self.servers.values():
             s.close()

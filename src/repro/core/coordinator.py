@@ -1,0 +1,355 @@
+"""2PC coordinator role: plan building and drive (§4.4).
+
+`Coordinator` turns each file operation into a multi-node plan
+(`{node_id: {"cmd": Cmd, "ops": [...], "keys": [...]}}`) and drives the 2PC
+over the router — or takes the single-node fast path, which commutes to one
+local log append ("we do not use this protocol for updates at a single
+node", §4.4).  Durable TX_COORD_BEGIN/DECIDE records let a crashed
+coordinator resume committing or aborting after replay (`recover_pending`).
+The client sends each file operation to "the node for metadata as a
+transaction coordinator" (§4.4), so every `coord_*` handler first checks
+this server owns the primary metadata key.
+"""
+
+from __future__ import annotations
+
+from .net import SimCrash, SimTimeout, rpc_handler
+from .participant import Participant
+from .state import ServerState
+from .txn import txid_from_payload, txid_payload
+from .types import (Cmd, Errno, FSError, InodeKind, InodeMeta, TxId,
+                    chunk_key, meta_key)
+
+
+class Coordinator:
+    def __init__(self, state: ServerState, wal: Participant) -> None:
+        self.state = state
+        self.wal = wal
+
+    # =====================================================================
+    # generic 2PC drive
+    # =====================================================================
+    def coord_execute(self, start: float, client_id: int, seq: int,
+                      plan: dict[str, dict]) -> tuple[dict, float]:
+        st = self.state
+        st.check_alive()
+        done = st.coord_done.get((client_id, seq))
+        if done is not None:
+            return {"outcome": done[1], "dup": True}, start
+        # single-node fast path: everything on this server -> one log append
+        if set(plan) == {st.node_id}:
+            ent = plan[st.node_id]
+            txid = TxId(client_id, seq, 0)
+            if not st.locks.try_acquire(list(ent["keys"]), txid):
+                raise FSError(Errno.ECONFLICT, "local lock conflict")
+            try:
+                st.check_writable()
+                t = self.wal.log(Cmd.LOCAL_META_UPDATE,
+                                 {"ops": ent["ops"]}, start)
+            finally:
+                st.locks.release(txid)
+            st.bump("tx_local")
+            return {"outcome": "commit"}, t
+
+        txid = TxId(client_id, seq, st.txseq)
+        txid_p = txid_payload(txid)
+        t = self.wal.log(Cmd.TX_COORD_BEGIN,
+                         {"txid": txid_p, "nodes": sorted(plan)}, start)
+        st.crash_at("coord_after_begin")
+        votes_ok, ends = True, []
+        for node in sorted(plan):
+            ent = plan[node]
+            try:
+                res, te = st.router.rpc(
+                    st.node_id, node, "rpc_prepare", t,
+                    nbytes_out=sum(len(str(o)) for o in ent["ops"]) + 128,
+                    txid_p=txid_p, cmd_id=int(ent["cmd"]), ops=ent["ops"],
+                    keys=ent["keys"], nl_version=None)
+                ends.append(te)
+                if not res["vote"]:
+                    votes_ok = False
+            except (SimTimeout, SimCrash):
+                ends.append(st.router.charge_timeout(t))
+                votes_ok = False
+        t = max(ends) if ends else t
+        decide = Cmd.TX_COORD_DECIDE_COMMIT if votes_ok \
+            else Cmd.TX_COORD_DECIDE_ABORT
+        t = self.wal.log(decide, {"txseq": txid.txseq, "client_id": client_id,
+                                  "seq": seq}, t)
+        st.crash_at("coord_after_decide")
+        t = self.send_decision(txid, sorted(plan), commit=votes_ok, start=t)
+        st.coord_pending.pop(txid.txseq, None)
+        st.bump("tx_commit" if votes_ok else "tx_abort")
+        return {"outcome": "commit" if votes_ok else "abort"}, t
+
+    def send_decision(self, txid: TxId, nodes: list[str], commit: bool,
+                      start: float) -> float:
+        st = self.state
+        txid_p = txid_payload(txid)
+        method = "rpc_commit" if commit else "rpc_abort"
+        ends = []
+        for node in nodes:
+            try:
+                _, te = st.router.rpc(st.node_id, node, method, start,
+                                      txid_p=txid_p)
+                ends.append(te)
+            except (SimTimeout, SimCrash):
+                # participant will learn the outcome on recovery / retry
+                ends.append(st.router.charge_timeout(start))
+        return max(ends) if ends else start
+
+    def recover_pending(self, start: float) -> float:
+        """Re-drive in-doubt coordinator transactions after replay (§4.4)."""
+        st = self.state
+        t = start
+        for txseq, info in sorted(st.coord_pending.items()):
+            txid = txid_from_payload(info["txid"])
+            nodes = list(info["nodes"])
+            if info["decided"] == "commit":
+                t = self.send_decision(txid, nodes, commit=True, start=t)
+            else:  # undecided or decided-abort: abort is always safe pre-commit
+                t = self.send_decision(txid, nodes, commit=False, start=t)
+        st.coord_pending.clear()
+        return t
+
+    # =====================================================================
+    # plan building helpers
+    # =====================================================================
+    def _plan_add(self, plan: dict, node: str, op: dict, keys: list[str],
+                  cmd: Cmd = Cmd.TX_PREPARE_META) -> None:
+        ent = plan.setdefault(node, {"cmd": cmd, "ops": [], "keys": []})
+        ent["ops"].append(op)
+        for k in keys:
+            if k not in ent["keys"]:
+                ent["keys"].append(k)
+
+    def _require_owner(self, key: str) -> None:
+        if self.state.owner(key) != self.state.node_id:
+            raise FSError(Errno.ESTALE,
+                          f"{self.state.node_id} is not the owner of {key}")
+
+    # =====================================================================
+    # FS-operation coordinators
+    # =====================================================================
+    @rpc_handler()
+    def coord_create(self, start: float, client_id: int, seq: int, parent: int,
+                     name: str, kind: int, cos_bucket: str | None,
+                     cos_key: str | None, mtime: float,
+                     nl_version: int | None = None) -> tuple[dict, float]:
+        """Create a file/dir: new metadata on its owner + parent dir link.
+        Coordinator = parent directory owner (it allocates the inode)."""
+        st = self.state
+        st.check_alive()
+        st.check_nl(nl_version)
+        self._require_owner(meta_key(parent))
+        d = st.metas.get(parent)
+        if d is None or d.deleted:
+            raise FSError(Errno.ENOENT, f"parent {parent}")
+        if d.kind != InodeKind.DIR:
+            raise FSError(Errno.ENOTDIR, f"parent {parent}")
+        if name in d.children:
+            raise FSError(Errno.EEXIST, f"{parent}/{name}")
+        ino = st.alloc_ino()
+        meta = InodeMeta(ino=ino, kind=InodeKind(kind), size=0, mtime=mtime,
+                         dirty=True, cos_bucket=cos_bucket, cos_key=cos_key,
+                         loaded=True)
+        plan: dict[str, dict] = {}
+        self._plan_add(plan, st.owner(meta_key(ino)),
+                       {"kind": "meta_put", "meta": meta.to_payload()},
+                       [meta_key(ino)])
+        self._plan_add(plan, st.node_id,
+                       {"kind": "dir_link", "ino": parent, "name": name,
+                        "child": ino, "mtime": mtime},
+                       [meta_key(parent)], Cmd.TX_PREPARE_DIR)
+        res, t = self.coord_execute(start, client_id, seq, plan)
+        if res["outcome"] != "commit":
+            raise FSError(Errno.ECONFLICT, "create aborted")
+        return {"ino": ino}, t
+
+    @rpc_handler()
+    def coord_load_dir(self, start: float, client_id: int, seq: int, ino: int,
+                       nl_version: int | None = None) -> tuple[dict, float]:
+        """§3.2: materialize a directory's children from the COS listing.
+        Load-once; clean child metas are created on their owner nodes."""
+        st = self.state
+        st.check_alive()
+        st.check_nl(nl_version)
+        self._require_owner(meta_key(ino))
+        d = st.metas.get(ino)
+        if d is None or d.deleted:
+            raise FSError(Errno.ENOENT, f"ino {ino}")
+        if d.kind != InodeKind.DIR:
+            raise FSError(Errno.ENOTDIR, f"ino {ino}")
+        if d.loaded or d.cos_bucket is None:
+            return {"children": dict(d.children)}, start
+        prefix = d.cos_key or ""
+        objs, prefixes, t = st.cos.list_prefix(d.cos_bucket, prefix,
+                                               start=start)
+        plan: dict[str, dict] = {}
+        new_children: dict[str, int] = {}
+        for key, size in objs:
+            nm = key[len(prefix):]
+            if not nm or nm in d.children:
+                continue
+            cino = st.alloc_ino()
+            meta = InodeMeta(ino=cino, kind=InodeKind.FILE, size=size,
+                             dirty=False, cos_bucket=d.cos_bucket, cos_key=key,
+                             loaded=True)
+            new_children[nm] = cino
+            self._plan_add(plan, st.owner(meta_key(cino)),
+                           {"kind": "meta_put", "meta": meta.to_payload()},
+                           [meta_key(cino)])
+        for pfx in prefixes:
+            nm = pfx[len(prefix):].rstrip("/")
+            if not nm or nm in d.children:
+                continue
+            cino = st.alloc_ino()
+            meta = InodeMeta(ino=cino, kind=InodeKind.DIR, dirty=False,
+                             cos_bucket=d.cos_bucket, cos_key=pfx,
+                             loaded=False)
+            new_children[nm] = cino
+            self._plan_add(plan, st.owner(meta_key(cino)),
+                           {"kind": "meta_put", "meta": meta.to_payload()},
+                           [meta_key(cino)])
+        self._plan_add(plan, st.node_id,
+                       {"kind": "dir_set_children", "ino": ino,
+                        "children": new_children, "loaded": True},
+                       [meta_key(ino)], Cmd.TX_PREPARE_DIR)
+        res, t = self.coord_execute(t, client_id, seq, plan)
+        if res["outcome"] != "commit":
+            raise FSError(Errno.ECONFLICT, "load_dir aborted")
+        d = st.metas.get(ino)
+        st.bump("dir_loads")
+        return {"children": dict(d.children) if d else {}}, t
+
+    @rpc_handler(request_bytes=512)
+    def coord_flush_write(self, start: float, client_id: int, seq: int,
+                          ino: int, staged: list, new_size: int, mtime: float,
+                          nl_version: int | None = None) -> tuple[dict, float]:
+        """§5.3: the flush transaction — promote staged chunk writes and
+        update metadata size atomically.  staged = [[chunk_off, [stage_ids]]]."""
+        st = self.state
+        st.check_alive()
+        st.check_nl(nl_version)
+        self._require_owner(meta_key(ino))
+        m = st.metas.get(ino)
+        if m is None or m.deleted:
+            raise FSError(Errno.ENOENT, f"ino {ino}")
+        plan: dict[str, dict] = {}
+        for chunk_off, stage_ids in staged:
+            self._plan_add(plan, st.owner(chunk_key(ino, chunk_off)),
+                           {"kind": "chunk_promote", "ino": ino,
+                            "chunk_off": chunk_off, "stage_ids": stage_ids},
+                           [chunk_key(ino, chunk_off)], Cmd.TX_PREPARE_CHUNK)
+        self._plan_add(plan, st.node_id,
+                       {"kind": "meta_set", "ino": ino,
+                        "size": max(new_size, 0), "mtime": mtime,
+                        "dirty": True},
+                       [meta_key(ino)])
+        res, t = self.coord_execute(start, client_id, seq, plan)
+        if res["outcome"] != "commit":
+            raise FSError(Errno.ECONFLICT, "flush aborted")
+        return {"size": new_size}, t
+
+    @rpc_handler()
+    def coord_unlink(self, start: float, client_id: int, seq: int, parent: int,
+                     name: str, ino: int, nl_version: int | None = None
+                     ) -> tuple[dict, float]:
+        """§5.4: set deleted+dirty on metadata and chunks + unlink from parent;
+        the COS delete happens at the next persisting transaction."""
+        st = self.state
+        st.check_alive()
+        st.check_nl(nl_version)
+        self._require_owner(meta_key(ino))
+        m = st.metas.get(ino)
+        if m is None or m.deleted:
+            raise FSError(Errno.ENOENT, f"ino {ino}")
+        if m.kind == InodeKind.DIR and m.children:
+            raise FSError(Errno.ENOTEMPTY, f"ino {ino}")
+        plan: dict[str, dict] = {}
+        self._plan_add(plan, st.node_id,
+                       {"kind": "meta_set", "ino": ino, "deleted": True,
+                        "dirty": True, "mtime": start},
+                       [meta_key(ino)])
+        for coff in st.chunk_offsets(m.size):
+            self._plan_add(plan, st.owner(chunk_key(ino, coff)),
+                           {"kind": "chunk_delete", "ino": ino,
+                            "chunk_off": coff},
+                           [chunk_key(ino, coff)], Cmd.TX_PREPARE_CHUNK)
+        self._plan_add(plan, st.owner(meta_key(parent)),
+                       {"kind": "dir_unlink", "ino": parent, "name": name},
+                       [meta_key(parent)], Cmd.TX_PREPARE_DIR)
+        res, t = self.coord_execute(start, client_id, seq, plan)
+        if res["outcome"] != "commit":
+            raise FSError(Errno.ECONFLICT, "unlink aborted")
+        return {"ok": True}, t
+
+    @rpc_handler()
+    def coord_rename(self, start: float, client_id: int, seq: int,
+                     src_parent: int, src_name: str, dst_parent: int,
+                     dst_name: str, ino: int, new_cos_key: str | None,
+                     nl_version: int | None = None) -> tuple[dict, float]:
+        st = self.state
+        st.check_alive()
+        st.check_nl(nl_version)
+        self._require_owner(meta_key(ino))
+        m = st.metas.get(ino)
+        if m is None or m.deleted:
+            raise FSError(Errno.ENOENT, f"ino {ino}")
+        if m.kind == InodeKind.DIR:
+            # directory rename would need a recursive COS re-key; like other
+            # COS wrapper FSs we reject it (documented in DESIGN.md)
+            raise FSError(Errno.EINVAL, "directory rename unsupported")
+        plan: dict[str, dict] = {}
+        op = {"kind": "meta_set", "ino": ino, "dirty": True,
+              "cos_key": new_cos_key}
+        if m.cos_key:
+            op["add_old_key"] = m.cos_key
+        self._plan_add(plan, st.node_id, op, [meta_key(ino)])
+        self._plan_add(plan, st.owner(meta_key(src_parent)),
+                       {"kind": "dir_unlink", "ino": src_parent,
+                        "name": src_name},
+                       [meta_key(src_parent)], Cmd.TX_PREPARE_DIR)
+        self._plan_add(plan, st.owner(meta_key(dst_parent)),
+                       {"kind": "dir_link", "ino": dst_parent,
+                        "name": dst_name, "child": ino},
+                       [meta_key(dst_parent)], Cmd.TX_PREPARE_DIR)
+        res, t = self.coord_execute(start, client_id, seq, plan)
+        if res["outcome"] != "commit":
+            raise FSError(Errno.ECONFLICT, "rename aborted")
+        return {"ok": True}, t
+
+    @rpc_handler()
+    def coord_truncate(self, start: float, client_id: int, seq: int, ino: int,
+                       new_size: int, mtime: float,
+                       nl_version: int | None = None) -> tuple[dict, float]:
+        st = self.state
+        st.check_alive()
+        st.check_nl(nl_version)
+        self._require_owner(meta_key(ino))
+        m = st.metas.get(ino)
+        if m is None or m.deleted:
+            raise FSError(Errno.ENOENT, f"ino {ino}")
+        plan: dict[str, dict] = {}
+        self._plan_add(plan, st.node_id,
+                       {"kind": "meta_set", "ino": ino, "size": new_size,
+                        "mtime": mtime, "dirty": True}, [meta_key(ino)])
+        # chunks entirely beyond the new size are deleted; the boundary
+        # chunk gets a zero-tail so re-growing never exposes stale bytes
+        for coff in st.chunk_offsets(m.size):
+            if coff >= new_size:
+                self._plan_add(plan, st.owner(chunk_key(ino, coff)),
+                               {"kind": "chunk_delete", "ino": ino,
+                                "chunk_off": coff},
+                               [chunk_key(ino, coff)], Cmd.TX_PREPARE_CHUNK)
+            elif coff + st.cfg.chunk_size > new_size:
+                frm = new_size - coff
+                self._plan_add(plan, st.owner(chunk_key(ino, coff)),
+                               {"kind": "chunk_zero_tail", "ino": ino,
+                                "chunk_off": coff, "from": frm,
+                                "length": st.cfg.chunk_size - frm},
+                               [chunk_key(ino, coff)], Cmd.TX_PREPARE_CHUNK)
+        res, t = self.coord_execute(start, client_id, seq, plan)
+        if res["outcome"] != "commit":
+            raise FSError(Errno.ECONFLICT, "truncate aborted")
+        return {"ok": True}, t

@@ -1,0 +1,134 @@
+"""Ring-change migration: scan / send / receive (§4.3, §5.5).
+
+`Migrator` implements the data movement of a reconfiguration, driven by the
+`Cluster` operator: scan for objects whose owner changes under the new ring,
+push dirty objects (and *all* directories — the grandparent-overwrite
+hazard, §4.3) to their new owners, and evict what moved or can be refetched
+from COS.  The receive side logs MIGRATE_RECV_* records so a crashed
+receiver replays to the same state.
+"""
+
+from __future__ import annotations
+
+from .hashring import HashRing
+from .net import rpc_handler
+from .participant import Participant
+from .state import ServerState
+from .stores import ChunkState, Segment
+from .types import Cmd, InodeKind, InodeMeta, chunk_key, meta_key
+
+
+class Migrator:
+    def __init__(self, state: ServerState, wal: Participant) -> None:
+        self.state = state
+        self.wal = wal
+
+    @rpc_handler()
+    def rpc_set_read_only(self, start: float, value: bool
+                          ) -> tuple[dict, float]:
+        st = self.state
+        st.check_alive()
+        st.read_only = value
+        return {"ok": True}, start
+
+    def migration_scan(self, new_ring: HashRing) -> dict:
+        """Objects this node owns whose owner changes under `new_ring`.
+        Policy (§4.3/§5.5): dirty metadata + dirty chunks migrate; directories
+        *always* migrate (the grandparent-overwrite hazard); clean files are
+        dropped (refetchable from COS)."""
+        st = self.state
+        out = {"metas": [], "dirs": [], "chunks": [], "drop_metas": [],
+               "drop_chunks": []}
+        for ino, m in st.metas.inodes.items():
+            if st.ring.node_for(meta_key(ino)) != st.node_id:
+                continue  # not ours (stale leftover)
+            new_owner = new_ring.node_for(meta_key(ino))
+            if new_owner == st.node_id:
+                continue
+            if m.kind == InodeKind.DIR:
+                out["dirs"].append((ino, new_owner))
+            elif m.dirty:
+                out["metas"].append((ino, new_owner))
+            else:
+                out["drop_metas"].append(ino)
+        for (ino, coff), c in st.chunks.chunks.items():
+            if st.ring.node_for(chunk_key(ino, coff)) != st.node_id:
+                continue
+            new_owner = new_ring.node_for(chunk_key(ino, coff))
+            if new_owner == st.node_id:
+                continue
+            if c.dirty:
+                out["chunks"].append(((ino, coff), new_owner))
+            else:
+                out["drop_chunks"].append((ino, coff))
+        return out
+
+    def migrate_out(self, scan: dict, start: float) -> tuple[dict, float]:
+        """Push scanned objects to their new owners; evict moved + dropped."""
+        st = self.state
+        t = start
+        moved = {"metas": 0, "dirs": 0, "chunks": 0, "bytes": 0}
+        for ino, dst in scan["dirs"] + scan["metas"]:
+            m = st.metas.get(ino)
+            if m is None:
+                continue
+            is_dir = m.kind == InodeKind.DIR
+            _, t = st.router.rpc(
+                st.node_id, dst, "rpc_migrate_recv_meta", t,
+                nbytes_out=len(str(m.to_payload())) + 64,
+                meta=m.to_payload(), is_dir=is_dir)
+            t = self.wal.log(Cmd.EVICT_META, {"ino": ino}, t)
+            moved["dirs" if is_dir else "metas"] += 1
+        for (ino, coff), dst in scan["chunks"]:
+            c = st.chunks.get(ino, coff)
+            if c is None:
+                continue
+            data = c.materialize(st.raft, max(s.off + s.length for s in
+                                              c.base_filled + c.segments)) \
+                if (c.base_filled or c.segments) else b""
+            _, t = st.router.rpc(
+                st.node_id, dst, "rpc_migrate_recv_chunk", t,
+                nbytes_out=len(data) + 128,
+                ino=ino, chunk_off=coff, version=c.version, dirty=c.dirty,
+                deleted=c.deleted, data=data)
+            t = self.wal.log(Cmd.EVICT_CHUNK, {"ino": ino, "chunk_off": coff},
+                             t)
+            moved["chunks"] += 1
+            moved["bytes"] += len(data)
+        for ino in scan["drop_metas"]:
+            t = self.wal.log(Cmd.EVICT_META, {"ino": ino}, t)
+        for (ino, coff) in scan["drop_chunks"]:
+            t = self.wal.log(Cmd.EVICT_CHUNK, {"ino": ino, "chunk_off": coff},
+                             t)
+        return moved, t
+
+    @rpc_handler(request_bytes=512)
+    def rpc_migrate_recv_meta(self, start: float, meta: dict, is_dir: bool
+                              ) -> tuple[dict, float]:
+        st = self.state
+        st.check_alive()
+        existing = st.metas.get(meta["ino"])
+        if existing is not None and existing.kind == InodeKind.DIR and is_dir:
+            # merge children: never overwrite a newer dir with an older copy
+            # (§4.3 grandparent-overwrite hazard)
+            merged = InodeMeta.from_payload(meta)
+            merged.children.update(existing.children)
+            merged.version = max(merged.version, existing.version)
+            meta = merged.to_payload()
+        cmd = Cmd.MIGRATE_RECV_DIR if is_dir else Cmd.MIGRATE_RECV_META
+        t = self.wal.log(cmd, {"meta": meta}, start)
+        return {"ok": True}, t
+
+    @rpc_handler(request_bytes=512)
+    def rpc_migrate_recv_chunk(self, start: float, ino: int, chunk_off: int,
+                               version: int, dirty: bool, deleted: bool,
+                               data: bytes) -> tuple[dict, float]:
+        st = self.state
+        st.check_alive()
+        ref, t = st.raft.append_bulk(bytes(data), start=start)
+        chunk = ChunkState(ino=ino, chunk_off=chunk_off, version=version,
+                           dirty=dirty, deleted=deleted,
+                           segments=[Segment(0, len(data), ref)])
+        t = self.wal.log(Cmd.MIGRATE_RECV_CHUNK, {"chunk": chunk.to_payload()},
+                         t)
+        return {"ok": True}, t

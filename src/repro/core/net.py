@@ -6,10 +6,20 @@ loopback cost for a colocated client in the detached deployment, or zero for
 the embedded deployment, §3.1).  Failure injection: dead destinations time
 out; named injection points raise `SimCrash` inside server code to emulate
 the black-dot crashes of Fig. 8.
+
+Dispatch is *typed*: every remotely callable handler is registered with the
+`@rpc_handler` decorator, which attaches an `RpcSpec` (wire name + declared
+default payload sizes).  `Router.register` collects each server's handler
+table once, and `Router.rpc` dispatches through it — an unregistered method
+name is a programming error (`UnknownRpcError`), not a silent `getattr`.
+The router also records per-method call counts, bytes, and virtual-time
+latency, both globally (`Router.method_stats`) and into the destination
+server's `stats` dict (`rpc.<method>.calls/bytes/vtime`).
 """
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import TYPE_CHECKING, Any, Callable
 
 from .simclock import HardwareModel, SimClock
@@ -31,6 +41,47 @@ class SimCrash(Exception):
         self.point = point
 
 
+class UnknownRpcError(Exception):
+    """Dispatch to a method name that no `@rpc_handler` registered."""
+
+
+@dataclass(frozen=True)
+class RpcSpec:
+    """Declared wire contract of one RPC handler."""
+
+    name: str                 # wire name (defaults to the function name)
+    request_bytes: int = 256  # default request payload size when the caller
+    reply_bytes: int = 256    # ... does not pass nbytes_out / nbytes_in
+
+
+def rpc_handler(name: str | None = None, *, request_bytes: int = 256,
+                reply_bytes: int = 256) -> Callable:
+    """Mark a server-subsystem method as a remotely callable RPC handler.
+
+    The handler signature is `m(start: float, **kwargs) -> (result, end)`.
+    Registration happens when the owning server is `Router.register`-ed.
+    """
+    def deco(fn: Callable) -> Callable:
+        fn.__rpc_spec__ = RpcSpec(name or fn.__name__,  # type: ignore[attr-defined]
+                                  request_bytes, reply_bytes)
+        return fn
+    return deco
+
+
+def collect_handlers(*objs: Any) -> dict[str, tuple[Callable, RpcSpec]]:
+    """Scan objects for `@rpc_handler`-decorated methods -> dispatch table."""
+    table: dict[str, tuple[Callable, RpcSpec]] = {}
+    for obj in objs:
+        for attr in dir(type(obj)):
+            fn = getattr(type(obj), attr, None)
+            spec = getattr(fn, "__rpc_spec__", None)
+            if spec is not None:
+                if spec.name in table:  # pragma: no cover
+                    raise AssertionError(f"duplicate RPC handler {spec.name}")
+                table[spec.name] = (getattr(obj, attr), spec)
+    return table
+
+
 class Router:
     def __init__(self, clock: SimClock, hw: HardwareModel,
                  timeout_s: float = 1.0) -> None:
@@ -38,20 +89,31 @@ class Router:
         self.hw = hw
         self.timeout_s = timeout_s
         self.servers: dict[str, "CacheServer"] = {}
+        # node_id -> {method name -> (bound handler, spec)}
+        self.handlers: dict[str, dict[str, tuple[Callable, RpcSpec]]] = {}
         self.partitioned: set[str] = set()
         # stats
         self.rpc_count = 0
         self.rpc_bytes = 0
+        # per-method: calls / bytes / vtime (summed reply latency) /
+        # timeouts (unreachable dst) / errors (handler raised)
+        self.method_stats: dict[str, dict[str, float]] = {}
+        self._skeys: dict[str, tuple[str, str, str]] = {}
 
     def register(self, server: "CacheServer") -> None:
         self.servers[server.node_id] = server
+        self.handlers[server.node_id] = server.rpc_handlers()
 
     def unregister(self, node_id: str) -> None:
         self.servers.pop(node_id, None)
+        self.handlers.pop(node_id, None)
 
     def reachable(self, node_id: str) -> bool:
         s = self.servers.get(node_id)
         return s is not None and s.alive and node_id not in self.partitioned
+
+    def registered_methods(self, node_id: str) -> list[str]:
+        return sorted(self.handlers.get(node_id, {}))
 
     # ---- timing ----------------------------------------------------------------
     def xfer(self, src: str | None, dst: str, nbytes: int, start: float,
@@ -69,23 +131,70 @@ class Router:
             return nic.acquire(t, nbytes)
         return t + nbytes / self.hw.nic_bps
 
+    def _mstat(self, method: str) -> dict[str, float]:
+        st = self.method_stats.get(method)
+        if st is None:
+            st = {"calls": 0, "bytes": 0, "vtime": 0.0, "timeouts": 0,
+                  "errors": 0}
+            self.method_stats[method] = st
+        return st
+
+    def _stat_keys(self, method: str) -> tuple[str, str, str]:
+        keys = self._skeys.get(method)
+        if keys is None:
+            keys = (f"rpc.{method}.calls", f"rpc.{method}.bytes",
+                    f"rpc.{method}.vtime")
+            self._skeys[method] = keys
+        return keys
+
     def rpc(self, src: str | None, dst: str, method: str, start: float,
-            nbytes_out: int = 256, nbytes_in: int = 256,
+            nbytes_out: int | None = None, nbytes_in: int | None = None,
             embedded_local: bool = False, **kwargs: Any) -> tuple[Any, float]:
-        """Invoke `method` on server `dst`.  The server method signature is
-        `m(start: float, **kwargs) -> (result, end_time)`.  Returns the result
-        and the time the reply lands back at the caller."""
-        self.rpc_count += 1
-        self.rpc_bytes += nbytes_out + nbytes_in
+        """Invoke registered handler `method` on server `dst`.
+
+        The handler signature is `m(start: float, **kwargs) -> (result,
+        end_time)`.  Returns the result and the time the reply lands back at
+        the caller.  Payload sizes default to the handler's declared
+        `RpcSpec` when not passed explicitly."""
+        # a bad method name is a programming error even when the node is
+        # down — surface it before (and without) any timeout accounting
+        node_handlers = self.handlers.get(dst)
+        if node_handlers is not None and method not in node_handlers:
+            raise UnknownRpcError(
+                f"no RPC handler {method!r} registered on {dst}; "
+                f"known: {self.registered_methods(dst)}")
         if not self.reachable(dst):
+            self._mstat(method)["timeouts"] += 1
             raise SimTimeout(f"rpc {method} to {dst}: timeout "
                              f"(+{self.timeout_s}s at t={start:.6f})")
-        arrive = self.xfer(src, dst, nbytes_out, start, embedded_local)
+        fn, spec = node_handlers[method]
+        n_out = spec.request_bytes if nbytes_out is None else nbytes_out
+        n_in = spec.reply_bytes if nbytes_in is None else nbytes_in
+        arrive = self.xfer(src, dst, n_out, start, embedded_local)
         server = self.servers[dst]
-        fn: Callable = getattr(server, method)
-        result, end = fn(start=arrive, **kwargs)
-        back = self.xfer(dst, src, nbytes_in, end, embedded_local) \
-            if src is not None else self.xfer(dst, dst, nbytes_in, end, True)
+        try:
+            result, end = fn(start=arrive, **kwargs)
+        except BaseException:
+            # failed dispatch (FSError / injected crash): keep the completed-
+            # call counters consistent, account the failure separately
+            self._mstat(method)["errors"] += 1
+            raise
+        back = self.xfer(dst, src, n_in, end, embedded_local) \
+            if src is not None else self.xfer(dst, dst, n_in, end, True)
+        latency = back - start
+        # all call counters (legacy globals + per-method + per-server) count
+        # *completed* dispatches; failures land in timeouts/errors above
+        self.rpc_count += 1
+        self.rpc_bytes += n_out + n_in
+        mstat = self._mstat(method)
+        mstat["calls"] += 1
+        mstat["bytes"] += n_out + n_in
+        mstat["vtime"] += latency
+        k_calls, k_bytes, k_vtime = self._stat_keys(method)
+        sstats = server.stats
+        sstats[k_calls] = sstats.get(k_calls, 0) + 1
+        sstats[k_bytes] = sstats.get(k_bytes, 0) + n_out + n_in
+        sstats[k_vtime] = sstats.get(k_vtime, 0.0) + latency
         return result, back
 
     def charge_timeout(self, start: float) -> float:

@@ -1,0 +1,266 @@
+"""WAL state machine + 2PC participant role (§4.4–4.5).
+
+`Participant` owns the *only* write path into working state: every mutation
+flows through `log()` (durable Raft append, then `apply()`), so a crashed
+server rebuilds exactly by replaying the log through the same `apply()`.
+It also implements the participant half of the internal 2PC —
+`rpc_prepare` / `rpc_commit` / `rpc_abort` with TxId dedup (§4.5: a retried
+RPC series with the same TxId replies with the old result).
+"""
+
+from __future__ import annotations
+
+from .hashring import HashRing
+from .net import rpc_handler
+from .raftlog import BulkRef
+from .state import ServerState
+from .stores import ChunkState, Segment, StagedWrite
+from .txn import PreparedOp, PreparedTx, txid_from_payload
+from .types import Cmd, InodeMeta
+
+
+class Participant:
+    def __init__(self, state: ServerState) -> None:
+        self.state = state
+
+    # =====================================================================
+    # durable log + state machine
+    # =====================================================================
+    def log(self, cmd: Cmd, payload: dict, start: float) -> float:
+        _, end = self.state.raft.append(cmd, payload, start=start)
+        self.apply(cmd, payload)
+        return end
+
+    def replay(self, start: float) -> float:
+        """Rebuild all working state from the WAL (§3.4); returns the time
+        after charging a sequential disk read of the whole log."""
+        st = self.state
+        st.reset_tables()
+        for entry in st.raft.replay():
+            self.apply(entry.cmd, entry.payload)
+        st.raft.bump_term()
+        return st.disk.acquire(start, st.raft.size_bytes())
+
+    def apply(self, cmd: Cmd, p: dict) -> None:
+        st = self.state
+        if cmd in (Cmd.TX_PREPARE_META, Cmd.TX_PREPARE_CHUNK,
+                   Cmd.TX_PREPARE_DIR, Cmd.TX_PREPARE_NODELIST):
+            txid = txid_from_payload(p["txid"])
+            tx = st.txs.prepared.get(txid) or PreparedTx(txid)
+            for op in p["ops"]:
+                tx.ops.append(PreparedOp(cmd, op))
+            keys = p.get("keys", [])
+            tx.locked_keys.extend(keys)
+            st.locks.try_acquire(keys, txid)
+            st.txs.put_prepared(tx)
+        elif cmd == Cmd.TX_COMMIT:
+            txid = txid_from_payload(p["txid"])
+            tx = st.txs.pop_prepared(txid)
+            if tx is not None:
+                for op in tx.ops:
+                    self.apply_op(op.payload)
+            st.locks.release(txid)
+            st.txs.record_completed(txid, "commit")
+        elif cmd == Cmd.TX_ABORT:
+            txid = txid_from_payload(p["txid"])
+            st.txs.pop_prepared(txid)
+            st.locks.release(txid)
+            st.txs.record_completed(txid, "abort")
+        elif cmd in (Cmd.LOCAL_META_UPDATE, Cmd.LOCAL_CHUNK_COMMIT,
+                     Cmd.LOCAL_DIR_UPDATE):
+            for op in p["ops"]:
+                self.apply_op(op)
+        elif cmd == Cmd.CHUNK_STAGE:
+            c = st.chunks.ensure(p["ino"], p["chunk_off"])
+            c.staged[p["stage_id"]] = StagedWrite(
+                p["stage_id"], p["off"], p["length"],
+                BulkRef.from_payload(p["ref"]))
+        elif cmd == Cmd.CHUNK_FILL_FROM_COS:
+            c = st.chunks.ensure(p["ino"], p["chunk_off"])
+            c.base_filled.append(Segment(p["off"], p["length"],
+                                         BulkRef.from_payload(p["ref"])))
+        elif cmd in (Cmd.EVICT_META,):
+            st.metas.evict(p["ino"])
+        elif cmd in (Cmd.EVICT_CHUNK,):
+            st.chunks.evict(p["ino"], p["chunk_off"])
+        elif cmd == Cmd.MIGRATE_RECV_META or cmd == Cmd.MIGRATE_RECV_DIR:
+            meta = InodeMeta.from_payload(p["meta"])
+            st.metas.put(meta)
+            st.note_ino(meta.ino)
+        elif cmd == Cmd.MIGRATE_RECV_CHUNK:
+            c = ChunkState.from_payload(p["chunk"])
+            st.chunks.chunks[(c.ino, c.chunk_off)] = c
+        elif cmd == Cmd.TX_COORD_BEGIN:
+            st.txseq = max(st.txseq, p["txid"]["txseq"] + 1)
+            st.coord_pending[p["txid"]["txseq"]] = {
+                "txid": p["txid"], "nodes": p["nodes"], "decided": None}
+        elif cmd == Cmd.TX_COORD_DECIDE_COMMIT:
+            info = st.coord_pending.get(p["txseq"])
+            if info is not None:
+                info["decided"] = "commit"
+            st.coord_done[(p["client_id"], p["seq"])] = (p["txseq"], "commit")
+        elif cmd == Cmd.TX_COORD_DECIDE_ABORT:
+            info = st.coord_pending.get(p["txseq"])
+            if info is not None:
+                info["decided"] = "abort"
+            st.coord_done[(p["client_id"], p["seq"])] = (p["txseq"], "abort")
+        elif cmd in (Cmd.MPU_BEGIN_RECORDED, Cmd.MPU_COMMITTED,
+                     Cmd.PUT_OBJECT_DONE, Cmd.COS_DELETE_DONE):
+            pass  # audit records consumed by recovery (abort orphan MPUs)
+        elif cmd in (Cmd.DIRTY_CLEARED_CHUNK,):
+            c = st.chunks.get(p["ino"], p["chunk_off"])
+            if c is not None and c.version == p["version"]:
+                c.dirty = False
+        elif cmd in (Cmd.DIRTY_CLEARED_META,):
+            m = st.metas.get(p["ino"])
+            if m is not None and m.version == p["version"]:
+                m.dirty = False
+                m.cos_old_keys = []
+        elif cmd == Cmd.NODE_JOIN or cmd == Cmd.NODE_LEAVE:
+            pass  # audit-only; the node list itself moves via nodelist_set ops
+        elif cmd == Cmd.SNAPSHOT:
+            self.load_snapshot(p)
+        else:  # pragma: no cover
+            raise AssertionError(f"unknown cmd {cmd}")
+
+    def apply_op(self, op: dict) -> None:
+        """Redo-op application — the only place working state mutates."""
+        st = self.state
+        kind = op["kind"]
+        if kind == "meta_put":
+            meta = InodeMeta.from_payload(op["meta"])
+            st.metas.put(meta)
+            st.note_ino(meta.ino)
+        elif kind == "meta_set":
+            m = st.metas.get(op["ino"])
+            if m is None:
+                return
+            for f in ("size", "mtime", "dirty", "deleted", "mode",
+                      "cos_bucket", "cos_key", "loaded"):
+                if f in op:
+                    setattr(m, f, op[f])
+            if "add_old_key" in op and op["add_old_key"]:
+                if op["add_old_key"] not in m.cos_old_keys:
+                    m.cos_old_keys.append(op["add_old_key"])
+            m.version += 1
+        elif kind == "meta_evict":
+            st.metas.evict(op["ino"])
+        elif kind == "dir_link":
+            d = st.metas.get(op["ino"])
+            if d is None:
+                return
+            d.children[op["name"]] = op["child"]
+            d.mtime = op.get("mtime", d.mtime)
+            d.version += 1
+            d.dirty = True
+        elif kind == "dir_set_children":
+            d = st.metas.get(op["ino"])
+            if d is None:
+                return
+            d.children.update({k: int(v) for k, v in op["children"].items()})
+            d.loaded = bool(op.get("loaded", d.loaded))
+            d.version += 1
+        elif kind == "dir_unlink":
+            d = st.metas.get(op["ino"])
+            if d is None:
+                return
+            d.children.pop(op["name"], None)
+            d.mtime = op.get("mtime", d.mtime)
+            d.version += 1
+            d.dirty = True
+        elif kind == "chunk_promote":
+            c = st.chunks.ensure(op["ino"], op["chunk_off"])
+            for sid in op["stage_ids"]:
+                sw = c.staged.pop(sid, None)
+                if sw is not None:
+                    c.segments.append(Segment(sw.off, sw.length, sw.ref))
+            c.version += 1
+            c.dirty = True
+            c.deleted = False
+        elif kind == "chunk_zero_tail":
+            c = st.chunks.ensure(op["ino"], op["chunk_off"])
+            c.segments.append(Segment(op["from"], op["length"], None))
+            c.version += 1
+            c.dirty = True
+        elif kind == "chunk_delete":
+            c = st.chunks.ensure(op["ino"], op["chunk_off"])
+            c.deleted = True
+            c.dirty = True
+            c.version += 1
+            c.base_filled, c.segments, c.staged = [], [], {}
+        elif kind == "chunk_evict":
+            st.chunks.evict(op["ino"], op["chunk_off"])
+        elif kind == "nodelist_set":
+            st.node_list = list(op["nodes"])
+            st.node_list_version = op["version"]
+            st.ring = HashRing(st.node_list)
+        else:  # pragma: no cover
+            raise AssertionError(f"unknown op kind {kind}")
+
+    # ---- snapshot/compaction -------------------------------------------------
+    def snapshot_payload(self) -> dict:
+        st = self.state
+        return {
+            "node_list": st.node_list, "nl_version": st.node_list_version,
+            "ino_counter": st.ino_counter,
+            "metas": {str(i): m.to_payload()
+                      for i, m in st.metas.inodes.items()},
+        }
+
+    def load_snapshot(self, p: dict) -> None:
+        st = self.state
+        st.node_list = list(p["node_list"])
+        st.node_list_version = p["nl_version"]
+        st.ring = HashRing(st.node_list)
+        st.ino_counter = p["ino_counter"]
+        for mp in p["metas"].values():
+            st.metas.put(InodeMeta.from_payload(mp))
+
+    # =====================================================================
+    # 2PC participant RPCs (§4.4)
+    # =====================================================================
+    @rpc_handler(request_bytes=512)
+    def rpc_prepare(self, start: float, txid_p: dict, cmd_id: int, ops: list,
+                    keys: list, nl_version: int | None = None
+                    ) -> tuple[dict, float]:
+        st = self.state
+        st.check_alive()
+        st.check_nl(nl_version)
+        txid = txid_from_payload(txid_p)
+        done = st.txs.completed_outcome(txid)
+        if done is not None:  # duplicated request (§4.5) — reply old result
+            return {"vote": done == "commit", "dup": True}, start
+        if st.txs.is_prepared(txid):  # retried prepare: already voted yes
+            return {"vote": True, "dup": True}, start
+        if Cmd(cmd_id) != Cmd.TX_PREPARE_NODELIST:
+            # reconfiguration transactions run *during* the read-only window
+            st.check_writable()
+        if not st.locks.try_acquire(list(keys), txid):
+            st.bump("lock_conflict")
+            return {"vote": False, "why": "lock"}, start
+        st.crash_at("participant_after_lock")
+        t = self.log(Cmd(cmd_id), {"txid": txid_p, "ops": ops, "keys": keys},
+                     start)
+        st.crash_at("participant_after_prepare")
+        return {"vote": True}, t
+
+    @rpc_handler()
+    def rpc_commit(self, start: float, txid_p: dict) -> tuple[dict, float]:
+        st = self.state
+        st.check_alive()
+        txid = txid_from_payload(txid_p)
+        if st.txs.completed_outcome(txid) is not None:
+            return {"ok": True, "dup": True}, start
+        t = self.log(Cmd.TX_COMMIT, {"txid": txid_p}, start)
+        st.crash_at("participant_after_commit")
+        return {"ok": True}, t
+
+    @rpc_handler()
+    def rpc_abort(self, start: float, txid_p: dict) -> tuple[dict, float]:
+        st = self.state
+        st.check_alive()
+        txid = txid_from_payload(txid_p)
+        if st.txs.completed_outcome(txid) is not None:
+            return {"ok": True, "dup": True}, start
+        t = self.log(Cmd.TX_ABORT, {"txid": txid_p}, start)
+        return {"ok": True}, t

@@ -1,0 +1,208 @@
+"""Persisting coordinator — Fig. 8's mixed transaction (fsync / flush expiry).
+
+`Persister` uploads a dirty inode to COS and then clears the dirty flags
+transactionally.  The multipart upload runs *before* the commit phase so any
+failure can abort it; the MPU-begin key is Raft-logged first so a crashed
+coordinator can abort the orphan upload at recovery (Fig. 8 black dots).
+Sub-chunk inodes whose single chunk is colocated take the PutObject fast
+path (§5.2: single participant, single log write).  Deletion propagates as
+a COS delete (§5.4), and rename/unlink leftovers are removed via
+`_delete_old_keys`.
+"""
+
+from __future__ import annotations
+
+from .cos import CosError
+from .net import SimCrash, SimTimeout, rpc_handler
+from .participant import Participant
+from .state import ServerState
+from .types import Cmd, Errno, FSError, InodeKind, InodeMeta, chunk_key
+
+
+class Persister:
+    def __init__(self, state: ServerState, wal: Participant) -> None:
+        self.state = state
+        self.wal = wal
+
+    @rpc_handler()
+    def coord_persist(self, start: float, ino: int, client_id: int, seq: int
+                      ) -> tuple[dict, float]:
+        """Upload a dirty inode to COS then clear dirty flags transactionally."""
+        st = self.state
+        st.check_alive()
+        m = st.metas.get(ino)
+        if m is None:
+            raise FSError(Errno.ENOENT, f"ino {ino}")
+        if not m.dirty and not m.cos_old_keys:
+            return {"outcome": "clean"}, start
+        if m.cos_bucket is None or m.cos_key is None:
+            return {"outcome": "no-backing"}, start  # not bucket-mapped
+        t = start
+
+        if m.deleted:
+            # §5.4: deletion propagates as a COS delete
+            t = st.cos.delete_object(m.cos_bucket, m.cos_key, start=t)
+            t = self.wal.log(Cmd.COS_DELETE_DONE,
+                             {"ino": ino, "key": m.cos_key}, t)
+            t = self._clear_dirty_everywhere(ino, m, t, client_id, seq)
+            return {"outcome": "deleted"}, t
+
+        if m.kind == InodeKind.DIR:
+            if not m.cos_key:  # bucket-mount root: nothing to upload
+                t = self.wal.log(Cmd.DIRTY_CLEARED_META,
+                                 {"ino": ino, "version": m.version}, t)
+                return {"outcome": "dir"}, t
+            # directory marker object ("key/" suffix denotes a dir, §3.2)
+            t = st.cos.put_object(m.cos_bucket,
+                                  m.cos_key.rstrip("/") + "/", b"", start=t)
+            t = self.wal.log(Cmd.PUT_OBJECT_DONE, {"ino": ino}, t)
+            t = self._clear_dirty_everywhere(ino, m, t, client_id, seq)
+            return {"outcome": "dir"}, t
+
+        offsets = st.chunk_offsets(m.size)
+        if m.size <= st.cfg.chunk_size and \
+                st.owner(chunk_key(ino, 0)) == st.node_id:
+            # PutObject fast path (§5.2): single participant, single log write
+            data, t = self.materialize_local(ino, 0, m, t)
+            try:
+                t = st.cos.put_object(m.cos_bucket, m.cos_key, data, start=t)
+            except CosError:
+                return {"outcome": "abort"}, t
+            st.crash_at("persist_after_put")
+            t = self.wal.log(Cmd.PUT_OBJECT_DONE, {"ino": ino}, t)
+            t = self._delete_old_keys(m, t)
+            t = self._clear_dirty_everywhere(ino, m, t, client_id, seq)
+            st.bump("persist_put")
+            return {"outcome": "commit"}, t
+
+        # MPU path: begin -> record key -> parallel part adds by chunk owners
+        try:
+            upload_id, t = st.cos.mpu_begin(m.cos_bucket, m.cos_key, start=t)
+        except CosError:
+            return {"outcome": "abort"}, t
+        t = self.wal.log(Cmd.MPU_BEGIN_RECORDED,
+                         {"ino": ino, "upload_id": upload_id,
+                          "bucket": m.cos_bucket, "key": m.cos_key}, t)
+        st.crash_at("persist_after_mpu_begin")
+        ends, ok = [], True
+        for part_no, coff in enumerate(offsets, start=1):
+            owner = st.owner(chunk_key(ino, coff))
+            ln = min(st.cfg.chunk_size, m.size - coff)
+            try:
+                if owner == st.node_id:
+                    data, te = self.materialize_local(ino, coff, m, t)
+                    te = st.cos.mpu_add(upload_id, part_no, data, start=te)
+                else:
+                    _, te = st.router.rpc(
+                        st.node_id, owner, "rpc_upload_part", t,
+                        nbytes_out=256, ino=ino, chunk_off=coff, length=ln,
+                        upload_id=upload_id, part_no=part_no,
+                        cos_bucket=m.cos_bucket, cos_key=m.cos_key,
+                        file_size=m.size)
+                ends.append(te)
+            except (SimTimeout, SimCrash, CosError):
+                ends.append(st.router.charge_timeout(t))
+                ok = False
+        t = max(ends) if ends else t
+        if not ok:
+            t = st.cos.mpu_abort(upload_id, start=t)
+            st.bump("persist_abort")
+            return {"outcome": "abort"}, t
+        try:
+            t = st.cos.mpu_commit(upload_id, start=t)
+        except CosError:
+            t = st.cos.mpu_abort(upload_id, start=t)
+            return {"outcome": "abort"}, t
+        st.crash_at("persist_after_mpu_commit")
+        t = self.wal.log(Cmd.MPU_COMMITTED,
+                         {"ino": ino, "upload_id": upload_id}, t)
+        t = self._delete_old_keys(m, t)
+        t = self._clear_dirty_everywhere(ino, m, t, client_id, seq)
+        st.bump("persist_mpu")
+        return {"outcome": "commit"}, t
+
+    def materialize_local(self, ino: int, coff: int, m: InodeMeta,
+                          start: float) -> tuple[bytes, float]:
+        st = self.state
+        ln = min(st.cfg.chunk_size, m.size - coff)
+        c = st.chunks.get(ino, coff)
+        t = start
+        if c is None or not c.covered(0, ln):
+            if m.cos_key is not None and st.cos.exists(m.cos_bucket, m.cos_key):
+                data, t = st.cos.get_object(m.cos_bucket, m.cos_key,
+                                            rng=(coff, ln), start=t)
+                ref, t = st.raft.append_bulk(data, start=t)
+                t = self.wal.log(Cmd.CHUNK_FILL_FROM_COS,
+                                 {"ino": ino, "chunk_off": coff, "off": 0,
+                                  "length": len(data),
+                                  "ref": ref.to_payload()}, t)
+                c = st.chunks.get(ino, coff)
+        if c is None:
+            return b"\0" * ln, t
+        t = st.disk.acquire(t, ln)
+        return c.materialize(st.raft, ln), t
+
+    @rpc_handler()
+    def rpc_upload_part(self, start: float, ino: int, chunk_off: int,
+                        length: int, upload_id: str, part_no: int,
+                        cos_bucket: str, cos_key: str, file_size: int
+                        ) -> tuple[dict, float]:
+        st = self.state
+        st.check_alive()
+        m = InodeMeta(ino=ino, kind=InodeKind.FILE, size=file_size,
+                      cos_bucket=cos_bucket, cos_key=cos_key)
+        data, t = self.materialize_local(ino, chunk_off, m, start)
+        t = st.cos.mpu_add(upload_id, part_no, data[:length], start=t)
+        st.bump("mpu_part")
+        return {"ok": True}, t
+
+    def _delete_old_keys(self, m: InodeMeta, start: float) -> float:
+        st = self.state
+        t = start
+        for old in m.cos_old_keys:
+            if old != m.cos_key:
+                t = st.cos.delete_object(m.cos_bucket, old, start=t)
+                t = self.wal.log(Cmd.COS_DELETE_DONE,
+                                 {"ino": m.ino, "key": old}, t)
+        return t
+
+    def _clear_dirty_everywhere(self, ino: int, m: InodeMeta, start: float,
+                                client_id: int, seq: int) -> float:
+        """Commit phase of Fig. 8: clear chunk dirty flags, then metadata.
+        Version guards make the clears safe against racing writers (§5.2)."""
+        st = self.state
+        t = start
+        ends = []
+        for coff in st.chunk_offsets(m.size):
+            owner = st.owner(chunk_key(ino, coff))
+            if owner == st.node_id:
+                c = st.chunks.get(ino, coff)
+                if c is not None:
+                    ends.append(self.wal.log(Cmd.DIRTY_CLEARED_CHUNK,
+                                             {"ino": ino, "chunk_off": coff,
+                                              "version": c.version}, t))
+            else:
+                try:
+                    _, te = st.router.rpc(st.node_id, owner,
+                                          "rpc_clear_chunk_dirty", t,
+                                          ino=ino, chunk_off=coff)
+                    ends.append(te)
+                except (SimTimeout, SimCrash):
+                    ends.append(st.router.charge_timeout(t))
+        t = max(ends) if ends else t
+        t = self.wal.log(Cmd.DIRTY_CLEARED_META, {"ino": ino,
+                                                  "version": m.version}, t)
+        return t
+
+    @rpc_handler()
+    def rpc_clear_chunk_dirty(self, start: float, ino: int, chunk_off: int
+                              ) -> tuple[dict, float]:
+        st = self.state
+        st.check_alive()
+        c = st.chunks.get(ino, chunk_off)
+        if c is None:
+            return {"ok": True}, start
+        t = self.wal.log(Cmd.DIRTY_CLEARED_CHUNK,
+                         {"ino": ino, "chunk_off": chunk_off,
+                          "version": c.version}, start)
+        return {"ok": True}, t

@@ -1,42 +1,41 @@
-"""Cache server: Raft state machine + 2PC participant/coordinator (§4–§5).
+"""Cache server façade: wiring for the layered subsystems (§3–§5).
 
 One `CacheServer` is the paper's "cluster-local cache" process on one node.
-It owns a shard of the namespace (consistent hashing over metadata keys and
-chunk keys), a two-level Raft WAL, and plays all three transaction roles:
+Since the layering refactor it is a *thin façade*: it builds the shared
+`ServerState` (state.py) and the four subsystems, exposes the read-side RPCs
+(no transaction; §3.3 servers always see committed state), and forwards
+everything else:
 
-* **participant** — `rpc_prepare` / `rpc_commit` / `rpc_abort` with TxId dedup;
-* **coordinator** — `coord_execute` drives the 2PC over the router; the
-  single-node fast path commutes to one local log append (§4.4);
-* **persisting coordinator** — `coord_persist` is Fig. 8's mixed transaction
-  with COS multipart upload as an additional participant (MPU begin recorded
-  *before* commit so a crash can abort the upload; PutObject fast path for
-  sub-chunk inodes).
+* `participant.Participant` — WAL `log`/`apply` state machine + the 2PC
+  participant RPCs (`rpc_prepare`/`rpc_commit`/`rpc_abort`, §4.4–4.5);
+* `coordinator.Coordinator` — 2PC planning and drive (`coord_create`,
+  `coord_rename`, …) with the single-node fast path (§4.4);
+* `persist.Persister` — Fig. 8's mixed persisting transaction (COS multipart
+  upload as an additional participant, dirty-clearing, old-key deletes);
+* `migration.Migrator` — ring-change scan/send/recv (§4.3, §5.5).
 
-All state mutations flow through `_log` (durable append, then `_apply`), so a
-crashed server rebuilds exactly by replay; `recover_pending` then re-drives
-in-doubt coordinator decisions (§4.4: "after a log replay, objcache can resume
-committing or aborting updates").
+All remotely callable methods carry an `@rpc_handler` spec; `rpc_handlers()`
+hands the typed dispatch table to the router at registration.
 """
 
 from __future__ import annotations
 
-import posixpath
-from dataclasses import dataclass, field
-from typing import Any
+from dataclasses import dataclass
+from typing import Callable
 
-from .cos import CosError, CosStore
-from .hashring import HashRing
-from .net import Router, SimCrash, SimTimeout
-from .raftlog import BulkRef, RaftLog
+from .coordinator import Coordinator
+from .cos import CosStore
+from .migration import Migrator
+from .net import Router, RpcSpec, collect_handlers, rpc_handler
+from .participant import Participant
+from .persist import Persister
+from .raftlog import RaftLog
 from .simclock import HardwareModel, SimClock
-from .stores import ChunkState, ChunkTable, MetaTable, Segment, StagedWrite
-from .txn import (LockTable, PreparedOp, PreparedTx, TxTable, txid_from_payload,
-                  txid_payload)
-from .types import (CHUNK_SIZE_DEFAULT, Cmd, Errno, FSError, InodeKind,
-                    InodeMeta, ROOT_INODE, TxId, chunk_key, meta_key)
+from .state import NODELIST_KEY, ServerState  # noqa: F401  (re-export)
+from .stores import ChunkState, ChunkTable, MetaTable, Segment
+from .types import CHUNK_SIZE_DEFAULT, Cmd, Errno, FSError, InodeKind
 
-NODELIST_KEY = "__nodelist__"
-_INO_SHIFT = 40
+__all__ = ["BucketMount", "CacheServer", "NODELIST_KEY", "ServerConfig"]
 
 
 @dataclass
@@ -61,326 +60,165 @@ class CacheServer:
                  clock: SimClock, router: Router, cos: CosStore,
                  hw: HardwareModel, cfg: ServerConfig | None = None,
                  buckets: list[BucketMount] | None = None) -> None:
-        self.node_id = node_id
-        self.server_uid = server_uid
-        self.clock = clock
-        self.router = router
-        self.cos = cos
-        self.hw = hw
-        self.cfg = cfg or ServerConfig()
+        cfg = cfg or ServerConfig()
         self.buckets = buckets or []
-        self.disk = hw.make_disk(node_id)
-        self.nic = hw.make_nic(node_id)
-        self.workdir = workdir
-        self.raft = RaftLog(workdir, clock, self.disk)
-
-        self.metas = MetaTable()
-        self.chunks = ChunkTable()
-        self.locks = LockTable()
-        self.txs = TxTable()
-        self.node_list: list[str] = []
-        self.node_list_version: int = 0
-        self.ring: HashRing = HashRing()
-        self.read_only = False
-        self.alive = True
-        self._ino_counter = 1
-        self._txseq = 1
-        # coordinator dedup: (client_id, seq) -> (txseq, outcome)
-        self._coord_done: dict[tuple[int, int], tuple[int, str]] = {}
-        # in-doubt coordinator transactions found by replay (txseq -> info)
-        self._coord_pending: dict[int, dict] = {}
-        # crash injection points (names match Fig. 8 black dots)
-        self._crash_points: set[str] = set()
-        # stats for benchmarks
-        self.stats: dict[str, int] = {}
+        disk = hw.make_disk(node_id)
+        self.state = ServerState(
+            node_id=node_id, server_uid=server_uid, workdir=workdir,
+            clock=clock, router=router, cos=cos, hw=hw, cfg=cfg,
+            raft=RaftLog(workdir, clock, disk), disk=disk,
+            nic=hw.make_nic(node_id))
+        # subsystems share the one ServerState
+        self.participant = Participant(self.state)
+        self.coordinator = Coordinator(self.state, self.participant)
+        self.persister = Persister(self.state, self.participant)
+        self.migrator = Migrator(self.state, self.participant)
+        # forwarded entry points (same bound signatures as before the split)
+        self._log = self.participant.log
+        self.rpc_prepare = self.participant.rpc_prepare
+        self.rpc_commit = self.participant.rpc_commit
+        self.rpc_abort = self.participant.rpc_abort
+        self.coord_execute = self.coordinator.coord_execute
+        self.coord_create = self.coordinator.coord_create
+        self.coord_load_dir = self.coordinator.coord_load_dir
+        self.coord_flush_write = self.coordinator.coord_flush_write
+        self.coord_unlink = self.coordinator.coord_unlink
+        self.coord_rename = self.coordinator.coord_rename
+        self.coord_truncate = self.coordinator.coord_truncate
+        self.recover_pending = self.coordinator.recover_pending
+        self.coord_persist = self.persister.coord_persist
+        self.rpc_upload_part = self.persister.rpc_upload_part
+        self.rpc_clear_chunk_dirty = self.persister.rpc_clear_chunk_dirty
+        self.rpc_set_read_only = self.migrator.rpc_set_read_only
+        self.migration_scan = self.migrator.migration_scan
+        self.migrate_out = self.migrator.migrate_out
+        self.rpc_migrate_recv_meta = self.migrator.rpc_migrate_recv_meta
+        self.rpc_migrate_recv_chunk = self.migrator.rpc_migrate_recv_chunk
+        self.arm_crash = self.state.arm_crash
+        self.alloc_ino = self.state.alloc_ino
+        self.owner = self.state.owner
+        self.chunk_offsets = self.state.chunk_offsets
+        self.snapshot_payload = self.participant.snapshot_payload
         router.register(self)
 
-    # =====================================================================
-    # lifecycle / failure injection
-    # =====================================================================
-    def arm_crash(self, point: str) -> None:
-        self._crash_points.add(point)
+    # ---- identity / shared-state views ----------------------------------
+    @property
+    def node_id(self) -> str: return self.state.node_id
 
-    def _crash_at(self, point: str) -> None:
-        if point in self._crash_points:
-            self._crash_points.discard(point)
-            self.alive = False
-            raise SimCrash(self.node_id, point)
+    @property
+    def server_uid(self) -> int: return self.state.server_uid
 
+    @property
+    def workdir(self) -> str: return self.state.workdir
+
+    @property
+    def clock(self) -> SimClock: return self.state.clock
+
+    @property
+    def router(self) -> Router: return self.state.router
+
+    @property
+    def cos(self) -> CosStore: return self.state.cos
+
+    @cos.setter
+    def cos(self, value: CosStore) -> None:
+        # tests/benchmarks swap in a shared external store after a cold start
+        self.state.cos = value
+
+    @property
+    def hw(self) -> HardwareModel: return self.state.hw
+
+    @property
+    def cfg(self) -> ServerConfig: return self.state.cfg
+
+    @property
+    def raft(self): return self.state.raft
+
+    @property
+    def disk(self): return self.state.disk
+
+    @property
+    def nic(self): return self.state.nic
+
+    @property
+    def metas(self) -> MetaTable: return self.state.metas
+
+    @property
+    def chunks(self) -> ChunkTable: return self.state.chunks
+
+    @property
+    def locks(self): return self.state.locks
+
+    @property
+    def txs(self): return self.state.txs
+
+    @property
+    def node_list(self) -> list[str]: return self.state.node_list
+
+    @property
+    def node_list_version(self) -> int: return self.state.node_list_version
+
+    @property
+    def ring(self): return self.state.ring
+
+    @property
+    def stats(self) -> dict: return self.state.stats
+
+    @property
+    def alive(self) -> bool: return self.state.alive
+
+    @alive.setter
+    def alive(self, value: bool) -> None: self.state.alive = value
+
+    @property
+    def read_only(self) -> bool: return self.state.read_only
+
+    @read_only.setter
+    def read_only(self, value: bool) -> None: self.state.read_only = value
+
+    def rpc_handlers(self) -> dict[str, tuple[Callable, RpcSpec]]:
+        """Typed dispatch table handed to the router at registration."""
+        return collect_handlers(self, self.participant, self.coordinator,
+                                self.persister, self.migrator)
+
+    # =====================================================================
+    # lifecycle
+    # =====================================================================
     def crash(self) -> None:
         """Hard-kill: nothing flushed beyond what the WAL already holds."""
-        self.alive = False
+        self.state.alive = False
 
     def restart(self, start: float | None = None) -> float:
         """Replay the WAL and rebuild all state (§3.4)."""
-        t0 = self.clock.now if start is None else start
-        self.metas = MetaTable()
-        self.chunks = ChunkTable()
-        self.locks = LockTable()
-        self.txs = TxTable()
-        self.node_list, self.node_list_version = [], 0
-        self.ring = HashRing()
-        self._ino_counter, self._coord_done, self._coord_pending = 1, {}, {}
-        nbytes = 0
-        for entry in self.raft.replay():
-            self._apply(entry.cmd, entry.payload)
-            nbytes += 64 + len(str(entry.payload))
-        self.raft.bump_term()
-        self.alive = True
-        self.read_only = False
-        # replay charges a sequential disk read of the whole log
-        end = self.disk.acquire(t0, self.raft.size_bytes())
-        self.clock.advance_to(end)
+        t0 = self.state.clock.now if start is None else start
+        end = self.participant.replay(t0)
+        self.state.alive = True
+        self.state.read_only = False
+        self.state.clock.advance_to(end)
         return end
-
-    def recover_pending(self, start: float) -> float:
-        """Re-drive in-doubt coordinator transactions after replay (§4.4)."""
-        t = start
-        for txseq, info in sorted(self._coord_pending.items()):
-            txid = txid_from_payload(info["txid"])
-            nodes = list(info["nodes"])
-            if info["decided"] == "commit":
-                t = self._send_decision(txid, nodes, commit=True, start=t)
-            else:  # undecided or decided-abort: abort is always safe pre-commit
-                t = self._send_decision(txid, nodes, commit=False, start=t)
-        self._coord_pending.clear()
-        return t
-
-    # =====================================================================
-    # durable log + state machine
-    # =====================================================================
-    def _log(self, cmd: Cmd, payload: dict, start: float) -> float:
-        _, end = self.raft.append(cmd, payload, start=start)
-        self._apply(cmd, payload)
-        return end
-
-    def _apply(self, cmd: Cmd, p: dict) -> None:
-        if cmd in (Cmd.TX_PREPARE_META, Cmd.TX_PREPARE_CHUNK,
-                   Cmd.TX_PREPARE_DIR, Cmd.TX_PREPARE_NODELIST):
-            txid = txid_from_payload(p["txid"])
-            tx = self.txs.prepared.get(txid) or PreparedTx(txid)
-            for op in p["ops"]:
-                tx.ops.append(PreparedOp(cmd, op))
-            keys = p.get("keys", [])
-            tx.locked_keys.extend(keys)
-            self.locks.try_acquire(keys, txid)
-            self.txs.put_prepared(tx)
-        elif cmd == Cmd.TX_COMMIT:
-            txid = txid_from_payload(p["txid"])
-            tx = self.txs.pop_prepared(txid)
-            if tx is not None:
-                for op in tx.ops:
-                    self._apply_op(op.payload)
-            self.locks.release(txid)
-            self.txs.record_completed(txid, "commit")
-        elif cmd == Cmd.TX_ABORT:
-            txid = txid_from_payload(p["txid"])
-            self.txs.pop_prepared(txid)
-            self.locks.release(txid)
-            self.txs.record_completed(txid, "abort")
-        elif cmd in (Cmd.LOCAL_META_UPDATE, Cmd.LOCAL_CHUNK_COMMIT,
-                     Cmd.LOCAL_DIR_UPDATE):
-            for op in p["ops"]:
-                self._apply_op(op)
-        elif cmd == Cmd.CHUNK_STAGE:
-            c = self.chunks.ensure(p["ino"], p["chunk_off"])
-            c.staged[p["stage_id"]] = StagedWrite(
-                p["stage_id"], p["off"], p["length"],
-                BulkRef.from_payload(p["ref"]))
-        elif cmd == Cmd.CHUNK_FILL_FROM_COS:
-            c = self.chunks.ensure(p["ino"], p["chunk_off"])
-            c.base_filled.append(Segment(p["off"], p["length"],
-                                         BulkRef.from_payload(p["ref"])))
-        elif cmd in (Cmd.EVICT_META,):
-            self.metas.evict(p["ino"])
-        elif cmd in (Cmd.EVICT_CHUNK,):
-            self.chunks.evict(p["ino"], p["chunk_off"])
-        elif cmd == Cmd.MIGRATE_RECV_META or cmd == Cmd.MIGRATE_RECV_DIR:
-            meta = InodeMeta.from_payload(p["meta"])
-            self.metas.put(meta)
-            self._note_ino(meta.ino)
-        elif cmd == Cmd.MIGRATE_RECV_CHUNK:
-            c = ChunkState.from_payload(p["chunk"])
-            self.chunks.chunks[(c.ino, c.chunk_off)] = c
-        elif cmd == Cmd.TX_COORD_BEGIN:
-            self._txseq = max(self._txseq, p["txid"]["txseq"] + 1)
-            self._coord_pending[p["txid"]["txseq"]] = {
-                "txid": p["txid"], "nodes": p["nodes"], "decided": None}
-        elif cmd == Cmd.TX_COORD_DECIDE_COMMIT:
-            info = self._coord_pending.get(p["txseq"])
-            if info is not None:
-                info["decided"] = "commit"
-            self._coord_done[(p["client_id"], p["seq"])] = (p["txseq"], "commit")
-        elif cmd == Cmd.TX_COORD_DECIDE_ABORT:
-            info = self._coord_pending.get(p["txseq"])
-            if info is not None:
-                info["decided"] = "abort"
-            self._coord_done[(p["client_id"], p["seq"])] = (p["txseq"], "abort")
-        elif cmd in (Cmd.MPU_BEGIN_RECORDED, Cmd.MPU_COMMITTED,
-                     Cmd.PUT_OBJECT_DONE, Cmd.COS_DELETE_DONE):
-            pass  # audit records consumed by recovery (abort orphan MPUs)
-        elif cmd in (Cmd.DIRTY_CLEARED_CHUNK,):
-            c = self.chunks.get(p["ino"], p["chunk_off"])
-            if c is not None and c.version == p["version"]:
-                c.dirty = False
-        elif cmd in (Cmd.DIRTY_CLEARED_META,):
-            m = self.metas.get(p["ino"])
-            if m is not None and m.version == p["version"]:
-                m.dirty = False
-                m.cos_old_keys = []
-        elif cmd == Cmd.NODE_JOIN or cmd == Cmd.NODE_LEAVE:
-            pass  # audit-only; the node list itself moves via nodelist_set ops
-        elif cmd == Cmd.SNAPSHOT:
-            self._load_snapshot(p)
-        else:  # pragma: no cover
-            raise AssertionError(f"unknown cmd {cmd}")
-
-    def _apply_op(self, op: dict) -> None:
-        """Redo-op application — the only place working state mutates."""
-        kind = op["kind"]
-        if kind == "meta_put":
-            meta = InodeMeta.from_payload(op["meta"])
-            self.metas.put(meta)
-            self._note_ino(meta.ino)
-        elif kind == "meta_set":
-            m = self.metas.get(op["ino"])
-            if m is None:
-                return
-            for f in ("size", "mtime", "dirty", "deleted", "mode",
-                      "cos_bucket", "cos_key", "loaded"):
-                if f in op:
-                    setattr(m, f, op[f])
-            if "add_old_key" in op and op["add_old_key"]:
-                if op["add_old_key"] not in m.cos_old_keys:
-                    m.cos_old_keys.append(op["add_old_key"])
-            m.version += 1
-        elif kind == "meta_evict":
-            self.metas.evict(op["ino"])
-        elif kind == "dir_link":
-            d = self.metas.get(op["ino"])
-            if d is None:
-                return
-            d.children[op["name"]] = op["child"]
-            d.mtime = op.get("mtime", d.mtime)
-            d.version += 1
-            d.dirty = True
-        elif kind == "dir_set_children":
-            d = self.metas.get(op["ino"])
-            if d is None:
-                return
-            d.children.update({k: int(v) for k, v in op["children"].items()})
-            d.loaded = bool(op.get("loaded", d.loaded))
-            d.version += 1
-        elif kind == "dir_unlink":
-            d = self.metas.get(op["ino"])
-            if d is None:
-                return
-            d.children.pop(op["name"], None)
-            d.mtime = op.get("mtime", d.mtime)
-            d.version += 1
-            d.dirty = True
-        elif kind == "chunk_promote":
-            c = self.chunks.ensure(op["ino"], op["chunk_off"])
-            for sid in op["stage_ids"]:
-                sw = c.staged.pop(sid, None)
-                if sw is not None:
-                    c.segments.append(Segment(sw.off, sw.length, sw.ref))
-            c.version += 1
-            c.dirty = True
-            c.deleted = False
-        elif kind == "chunk_zero_tail":
-            c = self.chunks.ensure(op["ino"], op["chunk_off"])
-            c.segments.append(Segment(op["from"], op["length"], None))
-            c.version += 1
-            c.dirty = True
-        elif kind == "chunk_delete":
-            c = self.chunks.ensure(op["ino"], op["chunk_off"])
-            c.deleted = True
-            c.dirty = True
-            c.version += 1
-            c.base_filled, c.segments, c.staged = [], [], {}
-        elif kind == "chunk_evict":
-            self.chunks.evict(op["ino"], op["chunk_off"])
-        elif kind == "nodelist_set":
-            self.node_list = list(op["nodes"])
-            self.node_list_version = op["version"]
-            self.ring = HashRing(self.node_list)
-        else:  # pragma: no cover
-            raise AssertionError(f"unknown op kind {kind}")
-
-    def _note_ino(self, ino: int) -> None:
-        if (ino >> _INO_SHIFT) == self.server_uid:
-            self._ino_counter = max(self._ino_counter,
-                                    (ino & ((1 << _INO_SHIFT) - 1)) + 1)
-
-    def alloc_ino(self) -> int:
-        ino = (self.server_uid << _INO_SHIFT) | self._ino_counter
-        self._ino_counter += 1
-        return ino
-
-    # ---- snapshot/compaction -------------------------------------------------
-    def snapshot_payload(self) -> dict:
-        return {
-            "node_list": self.node_list, "nl_version": self.node_list_version,
-            "ino_counter": self._ino_counter,
-            "metas": {str(i): m.to_payload() for i, m in self.metas.inodes.items()},
-        }
-
-    def _load_snapshot(self, p: dict) -> None:
-        self.node_list = list(p["node_list"])
-        self.node_list_version = p["nl_version"]
-        self.ring = HashRing(self.node_list)
-        self._ino_counter = p["ino_counter"]
-        for mp in p["metas"].values():
-            self.metas.put(InodeMeta.from_payload(mp))
-
-    # =====================================================================
-    # helpers
-    # =====================================================================
-    def _check_alive(self) -> None:
-        if not self.alive:
-            raise SimTimeout(f"{self.node_id} is down")
-
-    def _check_nl(self, nl_version: int | None) -> None:
-        """§4.3: every request carries the client's node-list version."""
-        if nl_version is not None and nl_version != self.node_list_version:
-            raise FSError(Errno.ESTALE,
-                          f"node list v{nl_version} != v{self.node_list_version}")
-
-    def _check_writable(self) -> None:
-        if self.read_only:
-            raise FSError(Errno.ECONFLICT, "server is read-only (migrating)")
-
-    def owner(self, key: str) -> str:
-        return self.ring.node_for(key)
-
-    def chunk_offsets(self, size: int) -> list[int]:
-        cs = self.cfg.chunk_size
-        if size <= 0:
-            return [0]
-        return list(range(0, size, cs))
-
-    def _bump(self, stat: str, n: int = 1) -> None:
-        self.stats[stat] = self.stats.get(stat, 0) + n
 
     # =====================================================================
     # read-side RPCs (no transaction; §3.3 servers always see committed state)
     # =====================================================================
+    @rpc_handler()
     def rpc_getattr(self, start: float, ino: int,
                     nl_version: int | None = None) -> tuple[dict, float]:
-        self._check_alive()
-        self._check_nl(nl_version)
-        m = self.metas.get(ino)
+        st = self.state
+        st.check_alive()
+        st.check_nl(nl_version)
+        m = st.metas.get(ino)
         if m is None or m.deleted:
             raise FSError(Errno.ENOENT, f"ino {ino}")
         return m.to_payload(), start
 
+    @rpc_handler()
     def rpc_lookup(self, start: float, parent: int, name: str,
                    nl_version: int | None = None) -> tuple[dict, float]:
         """Single-name lookup in a parent directory this server owns."""
-        self._check_alive()
-        self._check_nl(nl_version)
-        d = self.metas.get(parent)
+        st = self.state
+        st.check_alive()
+        st.check_nl(nl_version)
+        d = st.metas.get(parent)
         if d is None or d.deleted:
             raise FSError(Errno.ENOENT, f"parent {parent}")
         if d.kind != InodeKind.DIR:
@@ -390,728 +228,113 @@ class CacheServer:
             raise FSError(Errno.ENOENT, f"{parent}/{name}")
         return {"ino": child}, start
 
+    @rpc_handler()
     def rpc_readdir(self, start: float, ino: int,
                     nl_version: int | None = None) -> tuple[dict, float]:
-        self._check_alive()
-        self._check_nl(nl_version)
-        d = self.metas.get(ino)
+        st = self.state
+        st.check_alive()
+        st.check_nl(nl_version)
+        d = st.metas.get(ino)
         if d is None or d.deleted:
             raise FSError(Errno.ENOENT, f"ino {ino}")
         if d.kind != InodeKind.DIR:
             raise FSError(Errno.ENOTDIR, f"ino {ino}")
         return {"children": dict(d.children), "loaded": d.loaded}, start
 
+    @rpc_handler(reply_bytes=512)
     def rpc_read_chunk(self, start: float, ino: int, chunk_off: int, off: int,
                        length: int, cos_bucket: str | None,
                        cos_key: str | None, file_size: int,
                        nl_version: int | None = None) -> tuple[bytes, float]:
         """Read [off, off+length) within one chunk; fills from COS on miss
         (§5.4: each predecessor downloads its own range of the inode)."""
-        self._check_alive()
-        self._check_nl(nl_version)
-        c = self.chunks.get(ino, chunk_off)
-        cover_len = max(0, min(self.cfg.chunk_size, file_size - chunk_off))
+        st = self.state
+        st.check_alive()
+        st.check_nl(nl_version)
+        c = st.chunks.get(ino, chunk_off)
+        cover_len = max(0, min(st.cfg.chunk_size, file_size - chunk_off))
         t = start
         if (c is None or not c.covered(off, min(length, cover_len - off))) \
                 and cos_bucket and cos_key and cover_len > 0 \
-                and self.cos.exists(cos_bucket, cos_key):
+                and st.cos.exists(cos_bucket, cos_key):
             # cache miss: fetch this chunk's whole range of the object once
-            self._bump("cos_fill")
-            data, t = self.cos.get_object(cos_bucket, cos_key,
-                                          rng=(chunk_off, cover_len), start=t)
-            ref, t = self.raft.append_bulk(data, start=t)
+            st.bump("cos_fill")
+            data, t = st.cos.get_object(cos_bucket, cos_key,
+                                        rng=(chunk_off, cover_len), start=t)
+            ref, t = st.raft.append_bulk(data, start=t)
             t = self._log(Cmd.CHUNK_FILL_FROM_COS,
                           {"ino": ino, "chunk_off": chunk_off, "off": 0,
                            "length": len(data), "ref": ref.to_payload()}, t)
-            c = self.chunks.get(ino, chunk_off)
+            c = st.chunks.get(ino, chunk_off)
         if c is None:
             return b"\0" * length, t
         want = min(length, max(cover_len, c.local_bytes()) - off)
         if want <= 0:
             return b"", t
-        buf = c.materialize(self.raft, off + want)[off:off + want]
+        buf = c.materialize(st.raft, off + want)[off:off + want]
         # local disk read of the materialized bytes
-        t = self.disk.acquire(t, len(buf))
-        self._bump("chunk_read_bytes", len(buf))
+        t = st.disk.acquire(t, len(buf))
+        st.bump("chunk_read_bytes", len(buf))
         return buf, t
 
+    @rpc_handler()
     def rpc_nodelist(self, start: float) -> tuple[dict, float]:
-        self._check_alive()
-        return {"nodes": list(self.node_list),
-                "version": self.node_list_version}, start
+        self.state.check_alive()
+        return {"nodes": list(self.state.node_list),
+                "version": self.state.node_list_version}, start
 
     # =====================================================================
     # write staging (§5.3: chunk transfer outside the metadata lock)
     # =====================================================================
+    @rpc_handler(request_bytes=512)
     def rpc_stage_write(self, start: float, ino: int, chunk_off: int, off: int,
                         data: bytes, stage_id: str,
                         nl_version: int | None = None) -> tuple[dict, float]:
-        self._check_alive()
-        self._check_nl(nl_version)
-        self._check_writable()
-        ref, t = self.raft.append_bulk(bytes(data), start=start)
+        st = self.state
+        st.check_alive()
+        st.check_nl(nl_version)
+        st.check_writable()
+        ref, t = st.raft.append_bulk(bytes(data), start=start)
         t = self._log(Cmd.CHUNK_STAGE,
                       {"ino": ino, "chunk_off": chunk_off, "off": off,
                        "length": len(data), "ref": ref.to_payload(),
                        "stage_id": stage_id}, t)
-        self._bump("staged_bytes", len(data))
-        return {"ok": True}, t
-
-    # =====================================================================
-    # 2PC participant (§4.4)
-    # =====================================================================
-    def rpc_prepare(self, start: float, txid_p: dict, cmd_id: int, ops: list,
-                    keys: list, nl_version: int | None = None
-                    ) -> tuple[dict, float]:
-        self._check_alive()
-        self._check_nl(nl_version)
-        txid = txid_from_payload(txid_p)
-        done = self.txs.completed_outcome(txid)
-        if done is not None:  # duplicated request (§4.5) — reply old result
-            return {"vote": done == "commit", "dup": True}, start
-        if self.txs.is_prepared(txid):  # retried prepare: already voted yes
-            return {"vote": True, "dup": True}, start
-        if Cmd(cmd_id) != Cmd.TX_PREPARE_NODELIST:
-            # reconfiguration transactions run *during* the read-only window
-            self._check_writable()
-        if not self.locks.try_acquire(list(keys), txid):
-            self._bump("lock_conflict")
-            return {"vote": False, "why": "lock"}, start
-        self._crash_at("participant_after_lock")
-        t = self._log(Cmd(cmd_id), {"txid": txid_p, "ops": ops, "keys": keys},
-                      start)
-        self._crash_at("participant_after_prepare")
-        return {"vote": True}, t
-
-    def rpc_commit(self, start: float, txid_p: dict) -> tuple[dict, float]:
-        self._check_alive()
-        txid = txid_from_payload(txid_p)
-        if self.txs.completed_outcome(txid) is not None:
-            return {"ok": True, "dup": True}, start
-        t = self._log(Cmd.TX_COMMIT, {"txid": txid_p}, start)
-        self._crash_at("participant_after_commit")
-        return {"ok": True}, t
-
-    def rpc_abort(self, start: float, txid_p: dict) -> tuple[dict, float]:
-        self._check_alive()
-        txid = txid_from_payload(txid_p)
-        if self.txs.completed_outcome(txid) is not None:
-            return {"ok": True, "dup": True}, start
-        t = self._log(Cmd.TX_ABORT, {"txid": txid_p}, start)
-        return {"ok": True}, t
-
-    # =====================================================================
-    # 2PC coordinator (§4.4) — plan = {node_id: {"cmd": Cmd, "ops": [...],
-    #                                            "keys": [...]}}
-    # =====================================================================
-    def coord_execute(self, start: float, client_id: int, seq: int,
-                      plan: dict[str, dict]) -> tuple[dict, float]:
-        self._check_alive()
-        done = self._coord_done.get((client_id, seq))
-        if done is not None:
-            return {"outcome": done[1], "dup": True}, start
-        # single-node fast path: everything on this server -> one log append
-        if set(plan) == {self.node_id}:
-            ent = plan[self.node_id]
-            txid = TxId(client_id, seq, 0)
-            if not self.locks.try_acquire(list(ent["keys"]), txid):
-                raise FSError(Errno.ECONFLICT, "local lock conflict")
-            try:
-                self._check_writable()
-                t = self._log(Cmd.LOCAL_META_UPDATE, {"ops": ent["ops"]}, start)
-            finally:
-                self.locks.release(txid)
-            self._bump("tx_local")
-            return {"outcome": "commit"}, t
-
-        txid = TxId(client_id, seq, self._txseq)
-        txid_p = txid_payload(txid)
-        t = self._log(Cmd.TX_COORD_BEGIN,
-                      {"txid": txid_p, "nodes": sorted(plan)}, start)
-        self._crash_at("coord_after_begin")
-        votes_ok, ends = True, []
-        for node in sorted(plan):
-            ent = plan[node]
-            try:
-                res, te = self.router.rpc(
-                    self.node_id, node, "rpc_prepare", t,
-                    nbytes_out=sum(len(str(o)) for o in ent["ops"]) + 128,
-                    txid_p=txid_p, cmd_id=int(ent["cmd"]), ops=ent["ops"],
-                    keys=ent["keys"], nl_version=None)
-                ends.append(te)
-                if not res["vote"]:
-                    votes_ok = False
-            except (SimTimeout, SimCrash):
-                ends.append(self.router.charge_timeout(t))
-                votes_ok = False
-        t = max(ends) if ends else t
-        decide = Cmd.TX_COORD_DECIDE_COMMIT if votes_ok \
-            else Cmd.TX_COORD_DECIDE_ABORT
-        t = self._log(decide, {"txseq": txid.txseq, "client_id": client_id,
-                               "seq": seq}, t)
-        self._crash_at("coord_after_decide")
-        t = self._send_decision(txid, sorted(plan), commit=votes_ok, start=t)
-        self._coord_pending.pop(txid.txseq, None)
-        self._bump("tx_commit" if votes_ok else "tx_abort")
-        return {"outcome": "commit" if votes_ok else "abort"}, t
-
-    def _send_decision(self, txid: TxId, nodes: list[str], commit: bool,
-                       start: float) -> float:
-        txid_p = txid_payload(txid)
-        method = "rpc_commit" if commit else "rpc_abort"
-        ends = []
-        for node in nodes:
-            try:
-                _, te = self.router.rpc(self.node_id, node, method, start,
-                                        txid_p=txid_p)
-                ends.append(te)
-            except (SimTimeout, SimCrash):
-                # participant will learn the outcome on recovery / retry
-                ends.append(self.router.charge_timeout(start))
-        return max(ends) if ends else start
-
-    # =====================================================================
-    # FS-operation coordinators — the client sends each file operation to
-    # "the node for metadata as a transaction coordinator" (§4.4); the
-    # coordinator builds the multi-node plan and drives the 2PC (or the
-    # single-node fast path).
-    # =====================================================================
-    def _plan_add(self, plan: dict, node: str, op: dict, keys: list[str],
-                  cmd: Cmd = Cmd.TX_PREPARE_META) -> None:
-        ent = plan.setdefault(node, {"cmd": cmd, "ops": [], "keys": []})
-        ent["ops"].append(op)
-        for k in keys:
-            if k not in ent["keys"]:
-                ent["keys"].append(k)
-
-    def _require_owner(self, key: str) -> None:
-        if self.owner(key) != self.node_id:
-            raise FSError(Errno.ESTALE,
-                          f"{self.node_id} is not the owner of {key}")
-
-    def coord_create(self, start: float, client_id: int, seq: int, parent: int,
-                     name: str, kind: int, cos_bucket: str | None,
-                     cos_key: str | None, mtime: float,
-                     nl_version: int | None = None) -> tuple[dict, float]:
-        """Create a file/dir: new metadata on its owner + parent dir link.
-        Coordinator = parent directory owner (it allocates the inode)."""
-        self._check_alive()
-        self._check_nl(nl_version)
-        self._require_owner(meta_key(parent))
-        d = self.metas.get(parent)
-        if d is None or d.deleted:
-            raise FSError(Errno.ENOENT, f"parent {parent}")
-        if d.kind != InodeKind.DIR:
-            raise FSError(Errno.ENOTDIR, f"parent {parent}")
-        if name in d.children:
-            raise FSError(Errno.EEXIST, f"{parent}/{name}")
-        ino = self.alloc_ino()
-        meta = InodeMeta(ino=ino, kind=InodeKind(kind), size=0, mtime=mtime,
-                         dirty=True, cos_bucket=cos_bucket, cos_key=cos_key,
-                         loaded=True)
-        plan: dict[str, dict] = {}
-        self._plan_add(plan, self.owner(meta_key(ino)),
-                       {"kind": "meta_put", "meta": meta.to_payload()},
-                       [meta_key(ino)])
-        self._plan_add(plan, self.node_id,
-                       {"kind": "dir_link", "ino": parent, "name": name,
-                        "child": ino, "mtime": mtime},
-                       [meta_key(parent)], Cmd.TX_PREPARE_DIR)
-        res, t = self.coord_execute(start, client_id, seq, plan)
-        if res["outcome"] != "commit":
-            raise FSError(Errno.ECONFLICT, "create aborted")
-        return {"ino": ino}, t
-
-    def coord_load_dir(self, start: float, client_id: int, seq: int, ino: int,
-                       nl_version: int | None = None) -> tuple[dict, float]:
-        """§3.2: materialize a directory's children from the COS listing.
-        Load-once; clean child metas are created on their owner nodes."""
-        self._check_alive()
-        self._check_nl(nl_version)
-        self._require_owner(meta_key(ino))
-        d = self.metas.get(ino)
-        if d is None or d.deleted:
-            raise FSError(Errno.ENOENT, f"ino {ino}")
-        if d.kind != InodeKind.DIR:
-            raise FSError(Errno.ENOTDIR, f"ino {ino}")
-        if d.loaded or d.cos_bucket is None:
-            return {"children": dict(d.children)}, start
-        prefix = d.cos_key or ""
-        objs, prefixes, t = self.cos.list_prefix(d.cos_bucket, prefix,
-                                                 start=start)
-        plan: dict[str, dict] = {}
-        new_children: dict[str, int] = {}
-        for key, size in objs:
-            nm = key[len(prefix):]
-            if not nm or nm in d.children:
-                continue
-            cino = self.alloc_ino()
-            meta = InodeMeta(ino=cino, kind=InodeKind.FILE, size=size,
-                             dirty=False, cos_bucket=d.cos_bucket, cos_key=key,
-                             loaded=True)
-            new_children[nm] = cino
-            self._plan_add(plan, self.owner(meta_key(cino)),
-                           {"kind": "meta_put", "meta": meta.to_payload()},
-                           [meta_key(cino)])
-        for pfx in prefixes:
-            nm = pfx[len(prefix):].rstrip("/")
-            if not nm or nm in d.children:
-                continue
-            cino = self.alloc_ino()
-            meta = InodeMeta(ino=cino, kind=InodeKind.DIR, dirty=False,
-                             cos_bucket=d.cos_bucket, cos_key=pfx,
-                             loaded=False)
-            new_children[nm] = cino
-            self._plan_add(plan, self.owner(meta_key(cino)),
-                           {"kind": "meta_put", "meta": meta.to_payload()},
-                           [meta_key(cino)])
-        self._plan_add(plan, self.node_id,
-                       {"kind": "dir_set_children", "ino": ino,
-                        "children": new_children, "loaded": True},
-                       [meta_key(ino)], Cmd.TX_PREPARE_DIR)
-        res, t = self.coord_execute(t, client_id, seq, plan)
-        if res["outcome"] != "commit":
-            raise FSError(Errno.ECONFLICT, "load_dir aborted")
-        d = self.metas.get(ino)
-        self._bump("dir_loads")
-        return {"children": dict(d.children) if d else {}}, t
-
-    def coord_flush_write(self, start: float, client_id: int, seq: int,
-                          ino: int, staged: list, new_size: int, mtime: float,
-                          nl_version: int | None = None) -> tuple[dict, float]:
-        """§5.3: the flush transaction — promote staged chunk writes and
-        update metadata size atomically.  staged = [[chunk_off, [stage_ids]]]."""
-        self._check_alive()
-        self._check_nl(nl_version)
-        self._require_owner(meta_key(ino))
-        m = self.metas.get(ino)
-        if m is None or m.deleted:
-            raise FSError(Errno.ENOENT, f"ino {ino}")
-        plan: dict[str, dict] = {}
-        for chunk_off, stage_ids in staged:
-            self._plan_add(plan, self.owner(chunk_key(ino, chunk_off)),
-                           {"kind": "chunk_promote", "ino": ino,
-                            "chunk_off": chunk_off, "stage_ids": stage_ids},
-                           [chunk_key(ino, chunk_off)], Cmd.TX_PREPARE_CHUNK)
-        self._plan_add(plan, self.node_id,
-                       {"kind": "meta_set", "ino": ino,
-                        "size": max(new_size, 0), "mtime": mtime,
-                        "dirty": True},
-                       [meta_key(ino)])
-        res, t = self.coord_execute(start, client_id, seq, plan)
-        if res["outcome"] != "commit":
-            raise FSError(Errno.ECONFLICT, "flush aborted")
-        return {"size": new_size}, t
-
-    def coord_unlink(self, start: float, client_id: int, seq: int, parent: int,
-                     name: str, ino: int, nl_version: int | None = None
-                     ) -> tuple[dict, float]:
-        """§5.4: set deleted+dirty on metadata and chunks + unlink from parent;
-        the COS delete happens at the next persisting transaction."""
-        self._check_alive()
-        self._check_nl(nl_version)
-        self._require_owner(meta_key(ino))
-        m = self.metas.get(ino)
-        if m is None or m.deleted:
-            raise FSError(Errno.ENOENT, f"ino {ino}")
-        if m.kind == InodeKind.DIR and m.children:
-            raise FSError(Errno.ENOTEMPTY, f"ino {ino}")
-        plan: dict[str, dict] = {}
-        self._plan_add(plan, self.node_id,
-                       {"kind": "meta_set", "ino": ino, "deleted": True,
-                        "dirty": True, "mtime": start},
-                       [meta_key(ino)])
-        for coff in self.chunk_offsets(m.size):
-            self._plan_add(plan, self.owner(chunk_key(ino, coff)),
-                           {"kind": "chunk_delete", "ino": ino,
-                            "chunk_off": coff},
-                           [chunk_key(ino, coff)], Cmd.TX_PREPARE_CHUNK)
-        self._plan_add(plan, self.owner(meta_key(parent)),
-                       {"kind": "dir_unlink", "ino": parent, "name": name},
-                       [meta_key(parent)], Cmd.TX_PREPARE_DIR)
-        res, t = self.coord_execute(start, client_id, seq, plan)
-        if res["outcome"] != "commit":
-            raise FSError(Errno.ECONFLICT, "unlink aborted")
-        return {"ok": True}, t
-
-    def coord_rename(self, start: float, client_id: int, seq: int,
-                     src_parent: int, src_name: str, dst_parent: int,
-                     dst_name: str, ino: int, new_cos_key: str | None,
-                     nl_version: int | None = None) -> tuple[dict, float]:
-        self._check_alive()
-        self._check_nl(nl_version)
-        self._require_owner(meta_key(ino))
-        m = self.metas.get(ino)
-        if m is None or m.deleted:
-            raise FSError(Errno.ENOENT, f"ino {ino}")
-        if m.kind == InodeKind.DIR:
-            # directory rename would need a recursive COS re-key; like other
-            # COS wrapper FSs we reject it (documented in DESIGN.md)
-            raise FSError(Errno.EINVAL, "directory rename unsupported")
-        plan: dict[str, dict] = {}
-        op = {"kind": "meta_set", "ino": ino, "dirty": True,
-              "cos_key": new_cos_key}
-        if m.cos_key:
-            op["add_old_key"] = m.cos_key
-        self._plan_add(plan, self.node_id, op, [meta_key(ino)])
-        self._plan_add(plan, self.owner(meta_key(src_parent)),
-                       {"kind": "dir_unlink", "ino": src_parent,
-                        "name": src_name},
-                       [meta_key(src_parent)], Cmd.TX_PREPARE_DIR)
-        self._plan_add(plan, self.owner(meta_key(dst_parent)),
-                       {"kind": "dir_link", "ino": dst_parent,
-                        "name": dst_name, "child": ino},
-                       [meta_key(dst_parent)], Cmd.TX_PREPARE_DIR)
-        res, t = self.coord_execute(start, client_id, seq, plan)
-        if res["outcome"] != "commit":
-            raise FSError(Errno.ECONFLICT, "rename aborted")
-        return {"ok": True}, t
-
-    def coord_truncate(self, start: float, client_id: int, seq: int, ino: int,
-                       new_size: int, mtime: float,
-                       nl_version: int | None = None) -> tuple[dict, float]:
-        self._check_alive()
-        self._check_nl(nl_version)
-        self._require_owner(meta_key(ino))
-        m = self.metas.get(ino)
-        if m is None or m.deleted:
-            raise FSError(Errno.ENOENT, f"ino {ino}")
-        plan: dict[str, dict] = {}
-        self._plan_add(plan, self.node_id,
-                       {"kind": "meta_set", "ino": ino, "size": new_size,
-                        "mtime": mtime, "dirty": True}, [meta_key(ino)])
-        # chunks entirely beyond the new size are deleted; the boundary
-        # chunk gets a zero-tail so re-growing never exposes stale bytes
-        for coff in self.chunk_offsets(m.size):
-            if coff >= new_size:
-                self._plan_add(plan, self.owner(chunk_key(ino, coff)),
-                               {"kind": "chunk_delete", "ino": ino,
-                                "chunk_off": coff},
-                               [chunk_key(ino, coff)], Cmd.TX_PREPARE_CHUNK)
-            elif coff + self.cfg.chunk_size > new_size:
-                frm = new_size - coff
-                self._plan_add(plan, self.owner(chunk_key(ino, coff)),
-                               {"kind": "chunk_zero_tail", "ino": ino,
-                                "chunk_off": coff, "from": frm,
-                                "length": self.cfg.chunk_size - frm},
-                               [chunk_key(ino, coff)], Cmd.TX_PREPARE_CHUNK)
-        res, t = self.coord_execute(start, client_id, seq, plan)
-        if res["outcome"] != "commit":
-            raise FSError(Errno.ECONFLICT, "truncate aborted")
-        return {"ok": True}, t
-
-    # =====================================================================
-    # persisting transaction — Fig. 8 (fsync / flush-interval expiry)
-    # =====================================================================
-    def coord_persist(self, start: float, ino: int, client_id: int, seq: int
-                      ) -> tuple[dict, float]:
-        """Upload a dirty inode to COS then clear dirty flags transactionally.
-
-        The MPU runs *before* the commit phase so any failure can abort it;
-        the MPU-begin key is Raft-logged first so a crashed coordinator can
-        abort the orphan upload at recovery (Fig. 8 black dots)."""
-        self._check_alive()
-        m = self.metas.get(ino)
-        if m is None:
-            raise FSError(Errno.ENOENT, f"ino {ino}")
-        if not m.dirty and not m.cos_old_keys:
-            return {"outcome": "clean"}, start
-        if m.cos_bucket is None or m.cos_key is None:
-            return {"outcome": "no-backing"}, start  # not bucket-mapped
-        t = start
-
-        if m.deleted:
-            # §5.4: deletion propagates as a COS delete
-            t = self.cos.delete_object(m.cos_bucket, m.cos_key, start=t)
-            t = self._log(Cmd.COS_DELETE_DONE,
-                          {"ino": ino, "key": m.cos_key}, t)
-            t = self._clear_dirty_everywhere(ino, m, t, client_id, seq)
-            return {"outcome": "deleted"}, t
-
-        if m.kind == InodeKind.DIR:
-            if not m.cos_key:  # bucket-mount root: nothing to upload
-                t = self._log(Cmd.DIRTY_CLEARED_META,
-                              {"ino": ino, "version": m.version}, t)
-                return {"outcome": "dir"}, t
-            # directory marker object ("key/" suffix denotes a dir, §3.2)
-            t = self.cos.put_object(m.cos_bucket,
-                                    m.cos_key.rstrip("/") + "/", b"", start=t)
-            t = self._log(Cmd.PUT_OBJECT_DONE, {"ino": ino}, t)
-            t = self._clear_dirty_everywhere(ino, m, t, client_id, seq)
-            return {"outcome": "dir"}, t
-
-        offsets = self.chunk_offsets(m.size)
-        if m.size <= self.cfg.chunk_size and \
-                self.owner(chunk_key(ino, 0)) == self.node_id:
-            # PutObject fast path (§5.2): single participant, single log write
-            data, t = self._materialize_local(ino, 0, m, t)
-            try:
-                t = self.cos.put_object(m.cos_bucket, m.cos_key, data, start=t)
-            except CosError:
-                return {"outcome": "abort"}, t
-            self._crash_at("persist_after_put")
-            t = self._log(Cmd.PUT_OBJECT_DONE, {"ino": ino}, t)
-            t = self._delete_old_keys(m, t)
-            t = self._clear_dirty_everywhere(ino, m, t, client_id, seq)
-            self._bump("persist_put")
-            return {"outcome": "commit"}, t
-
-        # MPU path: begin -> record key -> parallel part adds by chunk owners
-        try:
-            upload_id, t = self.cos.mpu_begin(m.cos_bucket, m.cos_key, start=t)
-        except CosError:
-            return {"outcome": "abort"}, t
-        t = self._log(Cmd.MPU_BEGIN_RECORDED,
-                      {"ino": ino, "upload_id": upload_id,
-                       "bucket": m.cos_bucket, "key": m.cos_key}, t)
-        self._crash_at("persist_after_mpu_begin")
-        ends, ok = [], True
-        for part_no, coff in enumerate(offsets, start=1):
-            owner = self.owner(chunk_key(ino, coff))
-            ln = min(self.cfg.chunk_size, m.size - coff)
-            try:
-                if owner == self.node_id:
-                    data, te = self._materialize_local(ino, coff, m, t)
-                    te = self.cos.mpu_add(upload_id, part_no, data, start=te)
-                else:
-                    _, te = self.router.rpc(
-                        self.node_id, owner, "rpc_upload_part", t,
-                        nbytes_out=256, ino=ino, chunk_off=coff, length=ln,
-                        upload_id=upload_id, part_no=part_no,
-                        cos_bucket=m.cos_bucket, cos_key=m.cos_key,
-                        file_size=m.size)
-                ends.append(te)
-            except (SimTimeout, SimCrash, CosError):
-                ends.append(self.router.charge_timeout(t))
-                ok = False
-        t = max(ends) if ends else t
-        if not ok:
-            t = self.cos.mpu_abort(upload_id, start=t)
-            self._bump("persist_abort")
-            return {"outcome": "abort"}, t
-        try:
-            t = self.cos.mpu_commit(upload_id, start=t)
-        except CosError:
-            t = self.cos.mpu_abort(upload_id, start=t)
-            return {"outcome": "abort"}, t
-        self._crash_at("persist_after_mpu_commit")
-        t = self._log(Cmd.MPU_COMMITTED, {"ino": ino, "upload_id": upload_id}, t)
-        t = self._delete_old_keys(m, t)
-        t = self._clear_dirty_everywhere(ino, m, t, client_id, seq)
-        self._bump("persist_mpu")
-        return {"outcome": "commit"}, t
-
-    def _materialize_local(self, ino: int, coff: int, m: InodeMeta,
-                           start: float) -> tuple[bytes, float]:
-        ln = min(self.cfg.chunk_size, m.size - coff)
-        c = self.chunks.get(ino, coff)
-        t = start
-        if c is None or not c.covered(0, ln):
-            if m.cos_key is not None and self.cos.exists(m.cos_bucket, m.cos_key):
-                data, t = self.cos.get_object(m.cos_bucket, m.cos_key,
-                                              rng=(coff, ln), start=t)
-                ref, t = self.raft.append_bulk(data, start=t)
-                t = self._log(Cmd.CHUNK_FILL_FROM_COS,
-                              {"ino": ino, "chunk_off": coff, "off": 0,
-                               "length": len(data), "ref": ref.to_payload()}, t)
-                c = self.chunks.get(ino, coff)
-        if c is None:
-            return b"\0" * ln, t
-        t = self.disk.acquire(t, ln)
-        return c.materialize(self.raft, ln), t
-
-    def rpc_upload_part(self, start: float, ino: int, chunk_off: int,
-                        length: int, upload_id: str, part_no: int,
-                        cos_bucket: str, cos_key: str, file_size: int
-                        ) -> tuple[dict, float]:
-        self._check_alive()
-        m = InodeMeta(ino=ino, kind=InodeKind.FILE, size=file_size,
-                      cos_bucket=cos_bucket, cos_key=cos_key)
-        data, t = self._materialize_local(ino, chunk_off, m, start)
-        t = self.cos.mpu_add(upload_id, part_no, data[:length], start=t)
-        self._bump("mpu_part")
-        return {"ok": True}, t
-
-    def _delete_old_keys(self, m: InodeMeta, start: float) -> float:
-        t = start
-        for old in m.cos_old_keys:
-            if old != m.cos_key:
-                t = self.cos.delete_object(m.cos_bucket, old, start=t)
-                t = self._log(Cmd.COS_DELETE_DONE, {"ino": m.ino, "key": old}, t)
-        return t
-
-    def _clear_dirty_everywhere(self, ino: int, m: InodeMeta, start: float,
-                                client_id: int, seq: int) -> float:
-        """Commit phase of Fig. 8: clear chunk dirty flags, then metadata.
-        Version guards make the clears safe against racing writers (§5.2)."""
-        t = start
-        ends = []
-        for coff in self.chunk_offsets(m.size):
-            owner = self.owner(chunk_key(ino, coff))
-            if owner == self.node_id:
-                c = self.chunks.get(ino, coff)
-                if c is not None:
-                    ends.append(self._log(Cmd.DIRTY_CLEARED_CHUNK,
-                                          {"ino": ino, "chunk_off": coff,
-                                           "version": c.version}, t))
-            else:
-                try:
-                    _, te = self.router.rpc(self.node_id, owner,
-                                            "rpc_clear_chunk_dirty", t,
-                                            ino=ino, chunk_off=coff)
-                    ends.append(te)
-                except (SimTimeout, SimCrash):
-                    ends.append(self.router.charge_timeout(t))
-        t = max(ends) if ends else t
-        t = self._log(Cmd.DIRTY_CLEARED_META, {"ino": ino,
-                                               "version": m.version}, t)
-        return t
-
-    def rpc_clear_chunk_dirty(self, start: float, ino: int, chunk_off: int
-                              ) -> tuple[dict, float]:
-        self._check_alive()
-        c = self.chunks.get(ino, chunk_off)
-        if c is None:
-            return {"ok": True}, start
-        t = self._log(Cmd.DIRTY_CLEARED_CHUNK,
-                      {"ino": ino, "chunk_off": chunk_off,
-                       "version": c.version}, start)
-        return {"ok": True}, t
-
-    # =====================================================================
-    # migration RPCs (§4.3) — driven by the Cluster reconfiguration txn
-    # =====================================================================
-    def rpc_set_read_only(self, start: float, value: bool) -> tuple[dict, float]:
-        self._check_alive()
-        self.read_only = value
-        return {"ok": True}, start
-
-    def migration_scan(self, new_ring: HashRing) -> dict:
-        """Objects this node owns whose owner changes under `new_ring`.
-        Policy (§4.3/§5.5): dirty metadata + dirty chunks migrate; directories
-        *always* migrate (the grandparent-overwrite hazard); clean files are
-        dropped (refetchable from COS)."""
-        out = {"metas": [], "dirs": [], "chunks": [], "drop_metas": [],
-               "drop_chunks": []}
-        for ino, m in self.metas.inodes.items():
-            if self.ring.node_for(meta_key(ino)) != self.node_id:
-                continue  # not ours (stale leftover)
-            new_owner = new_ring.node_for(meta_key(ino))
-            if new_owner == self.node_id:
-                continue
-            if m.kind == InodeKind.DIR:
-                out["dirs"].append((ino, new_owner))
-            elif m.dirty:
-                out["metas"].append((ino, new_owner))
-            else:
-                out["drop_metas"].append(ino)
-        for (ino, coff), c in self.chunks.chunks.items():
-            if self.ring.node_for(chunk_key(ino, coff)) != self.node_id:
-                continue
-            new_owner = new_ring.node_for(chunk_key(ino, coff))
-            if new_owner == self.node_id:
-                continue
-            if c.dirty:
-                out["chunks"].append(((ino, coff), new_owner))
-            else:
-                out["drop_chunks"].append((ino, coff))
-        return out
-
-    def migrate_out(self, scan: dict, start: float) -> tuple[dict, float]:
-        """Push scanned objects to their new owners; evict moved + dropped."""
-        t = start
-        moved = {"metas": 0, "dirs": 0, "chunks": 0, "bytes": 0}
-        for ino, dst in scan["dirs"] + scan["metas"]:
-            m = self.metas.get(ino)
-            if m is None:
-                continue
-            is_dir = m.kind == InodeKind.DIR
-            _, t = self.router.rpc(
-                self.node_id, dst, "rpc_migrate_recv_meta", t,
-                nbytes_out=len(str(m.to_payload())) + 64,
-                meta=m.to_payload(), is_dir=is_dir)
-            t = self._log(Cmd.EVICT_META, {"ino": ino}, t)
-            moved["dirs" if is_dir else "metas"] += 1
-        for (ino, coff), dst in scan["chunks"]:
-            c = self.chunks.get(ino, coff)
-            if c is None:
-                continue
-            length = c.local_bytes()
-            data = c.materialize(self.raft, max(s.off + s.length for s in
-                                                c.base_filled + c.segments)) \
-                if (c.base_filled or c.segments) else b""
-            _, t = self.router.rpc(
-                self.node_id, dst, "rpc_migrate_recv_chunk", t,
-                nbytes_out=len(data) + 128,
-                ino=ino, chunk_off=coff, version=c.version, dirty=c.dirty,
-                deleted=c.deleted, data=data)
-            t = self._log(Cmd.EVICT_CHUNK, {"ino": ino, "chunk_off": coff}, t)
-            moved["chunks"] += 1
-            moved["bytes"] += len(data)
-        for ino in scan["drop_metas"]:
-            t = self._log(Cmd.EVICT_META, {"ino": ino}, t)
-        for (ino, coff) in scan["drop_chunks"]:
-            t = self._log(Cmd.EVICT_CHUNK, {"ino": ino, "chunk_off": coff}, t)
-        return moved, t
-
-    def rpc_migrate_recv_meta(self, start: float, meta: dict, is_dir: bool
-                              ) -> tuple[dict, float]:
-        self._check_alive()
-        existing = self.metas.get(meta["ino"])
-        if existing is not None and existing.kind == InodeKind.DIR and is_dir:
-            # merge children: never overwrite a newer dir with an older copy
-            # (§4.3 grandparent-overwrite hazard)
-            merged = InodeMeta.from_payload(meta)
-            merged.children.update(existing.children)
-            merged.version = max(merged.version, existing.version)
-            meta = merged.to_payload()
-        cmd = Cmd.MIGRATE_RECV_DIR if is_dir else Cmd.MIGRATE_RECV_META
-        t = self._log(cmd, {"meta": meta}, start)
-        return {"ok": True}, t
-
-    def rpc_migrate_recv_chunk(self, start: float, ino: int, chunk_off: int,
-                               version: int, dirty: bool, deleted: bool,
-                               data: bytes) -> tuple[dict, float]:
-        self._check_alive()
-        ref, t = self.raft.append_bulk(bytes(data), start=start)
-        chunk = ChunkState(ino=ino, chunk_off=chunk_off, version=version,
-                           dirty=dirty, deleted=deleted,
-                           segments=[Segment(0, len(data), ref)])
-        t = self._log(Cmd.MIGRATE_RECV_CHUNK, {"chunk": chunk.to_payload()}, t)
+        st.bump("staged_bytes", len(data))
         return {"ok": True}, t
 
     # =====================================================================
     # maintenance
     # =====================================================================
     def dirty_inventory(self) -> dict:
-        return {"metas": self.metas.dirty_inos(),
-                "chunks": self.chunks.dirty_keys()}
+        return {"metas": self.state.metas.dirty_inos(),
+                "chunks": self.state.chunks.dirty_keys()}
 
     def local_bytes(self) -> int:
-        return sum(c.local_bytes() for c in self.chunks.chunks.values())
+        return sum(c.local_bytes() for c in self.state.chunks.chunks.values())
 
     def compact(self) -> None:
         """Log compaction: rewrite the primary log as one SNAPSHOT entry and
         re-append committed chunk contents with fresh bulk refs.  Requires a
         quiescent server (no prepared transactions)."""
-        assert not self.txs.prepared, "compact requires a quiescent server"
+        st = self.state
+        assert not st.txs.prepared, "compact requires a quiescent server"
         # materialize committed chunk contents before bulk files are truncated
         mat: list[tuple[ChunkState, bytes]] = []
-        for c in self.chunks.chunks.values():
+        for c in st.chunks.chunks.values():
             extent = max((s.off + s.length
                           for s in c.base_filled + c.segments), default=0)
-            mat.append((c, c.materialize(self.raft, extent) if extent else b""))
-        self.raft.compact(self.snapshot_payload())
+            mat.append((c, c.materialize(st.raft, extent) if extent else b""))
+        st.raft.compact(self.snapshot_payload())
         for c, data in mat:
-            ref, _ = self.raft.append_bulk(data)
+            ref, _ = st.raft.append_bulk(data)
             nc = ChunkState(ino=c.ino, chunk_off=c.chunk_off,
                             version=c.version, dirty=c.dirty,
                             deleted=c.deleted,
                             segments=[Segment(0, len(data), ref)] if data
                             else [])
-            self.raft.append(Cmd.MIGRATE_RECV_CHUNK,
-                             {"chunk": nc.to_payload()})
-            self.chunks.chunks[(c.ino, c.chunk_off)] = nc
+            st.raft.append(Cmd.MIGRATE_RECV_CHUNK,
+                           {"chunk": nc.to_payload()})
+            st.chunks.chunks[(c.ino, c.chunk_off)] = nc
 
     def close(self) -> None:
-        self.raft.close()
+        self.state.raft.close()

@@ -1,0 +1,140 @@
+"""Shared per-server state — the explicit seam between server subsystems.
+
+`ServerState` owns everything a `CacheServer` used to keep as instance
+attributes: the durable-log handle, the working tables rebuilt by replay
+(§3.4), transaction bookkeeping, the node list/ring, and the stats counters
+the benchmarks read.  The four subsystems (`participant`, `coordinator`,
+`persist`, `migration`) and the `CacheServer` façade all hold a reference to
+the *same* `ServerState`, so a WAL replay that swaps the tables is visible
+everywhere at once.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
+
+from .hashring import HashRing
+from .net import Router, SimCrash, SimTimeout
+from .raftlog import RaftLog
+from .simclock import HardwareModel, Resource, SimClock
+from .stores import ChunkTable, MetaTable
+from .txn import LockTable, TxTable
+from .types import Errno, FSError
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .cos import CosStore
+    from .server import ServerConfig
+
+NODELIST_KEY = "__nodelist__"
+_INO_SHIFT = 40
+
+
+@dataclass
+class ServerState:
+    """All mutable + wiring state of one cache-server process."""
+
+    # ---- identity / wiring (never changes after construction) -----------
+    node_id: str
+    server_uid: int
+    workdir: str
+    clock: SimClock
+    router: Router
+    cos: "CosStore"
+    hw: HardwareModel
+    cfg: "ServerConfig"
+    raft: RaftLog
+    disk: Resource
+    nic: Resource
+
+    # ---- working tables, rebuilt exactly by WAL replay (§3.4) -----------
+    metas: MetaTable = field(default_factory=MetaTable)
+    chunks: ChunkTable = field(default_factory=ChunkTable)
+    locks: LockTable = field(default_factory=LockTable)
+    txs: TxTable = field(default_factory=TxTable)
+    node_list: list[str] = field(default_factory=list)
+    node_list_version: int = 0
+    ring: HashRing = field(default_factory=HashRing)
+
+    # ---- lifecycle -------------------------------------------------------
+    read_only: bool = False
+    alive: bool = True
+
+    # ---- counters / transaction bookkeeping ------------------------------
+    ino_counter: int = 1
+    txseq: int = 1
+    # coordinator dedup: (client_id, seq) -> (txseq, outcome)
+    coord_done: dict[tuple[int, int], tuple[int, str]] = field(
+        default_factory=dict)
+    # in-doubt coordinator transactions found by replay (txseq -> info)
+    coord_pending: dict[int, dict] = field(default_factory=dict)
+    # crash injection points (names match Fig. 8 black dots)
+    crash_points: set[str] = field(default_factory=set)
+    # stats for benchmarks (per-method RPC stats land here too)
+    stats: dict[str, float] = field(default_factory=dict)
+
+    # =====================================================================
+    # lifecycle / failure injection
+    # =====================================================================
+    def reset_tables(self) -> None:
+        """Drop all replay-derived state ahead of a WAL replay."""
+        self.metas = MetaTable()
+        self.chunks = ChunkTable()
+        self.locks = LockTable()
+        self.txs = TxTable()
+        self.node_list, self.node_list_version = [], 0
+        self.ring = HashRing()
+        self.ino_counter = 1
+        self.coord_done, self.coord_pending = {}, {}
+
+    def arm_crash(self, point: str) -> None:
+        self.crash_points.add(point)
+
+    def crash_at(self, point: str) -> None:
+        if point in self.crash_points:
+            self.crash_points.discard(point)
+            self.alive = False
+            raise SimCrash(self.node_id, point)
+
+    # =====================================================================
+    # request guards
+    # =====================================================================
+    def check_alive(self) -> None:
+        if not self.alive:
+            raise SimTimeout(f"{self.node_id} is down")
+
+    def check_nl(self, nl_version: int | None) -> None:
+        """§4.3: every request carries the client's node-list version."""
+        if nl_version is not None and nl_version != self.node_list_version:
+            raise FSError(Errno.ESTALE,
+                          f"node list v{nl_version} != "
+                          f"v{self.node_list_version}")
+
+    def check_writable(self) -> None:
+        if self.read_only:
+            raise FSError(Errno.ECONFLICT, "server is read-only (migrating)")
+
+    # =====================================================================
+    # placement / allocation helpers
+    # =====================================================================
+    def owner(self, key: str) -> str:
+        return self.ring.node_for(key)
+
+    def chunk_offsets(self, size: int) -> list[int]:
+        cs = self.cfg.chunk_size
+        if size <= 0:
+            return [0]
+        return list(range(0, size, cs))
+
+    def note_ino(self, ino: int) -> None:
+        if (ino >> _INO_SHIFT) == self.server_uid:
+            self.ino_counter = max(self.ino_counter,
+                                   (ino & ((1 << _INO_SHIFT) - 1)) + 1)
+
+    def alloc_ino(self) -> int:
+        ino = (self.server_uid << _INO_SHIFT) | self.ino_counter
+        self.ino_counter += 1
+        return ino
+
+    def bump(self, stat: str, n: float = 1) -> None:
+        self.stats[stat] = self.stats.get(stat, 0) + n

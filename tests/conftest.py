@@ -8,6 +8,18 @@ from repro.core import (BucketMount, ClientConfig, Cluster, ObjcacheClient,
 
 CHUNK = 256 * 1024   # small chunks so multi-chunk paths trigger quickly
 
+# Modules whose tests are all `slow` (JAX smoke): skip collecting them under
+# the default `-m 'not slow'` so tier-1 never pays their import-time JAX cost.
+_SLOW_MODULES = {"test_kernels.py", "test_models_smoke.py",
+                 "test_dryrun_integration.py"}
+
+
+def pytest_ignore_collect(collection_path, config):
+    if collection_path.name in _SLOW_MODULES and \
+            config.option.markexpr == "not slow":
+        return True
+    return None
+
 
 @pytest.fixture()
 def workdir():

@@ -1,0 +1,101 @@
+"""Property-test front-end: real `hypothesis` when installed, otherwise a
+deterministic example-based fallback.
+
+The fallback implements just the strategy surface our tests use
+(`integers`, `sampled_from`, `text`, `tuples`, `lists`, `.filter`) as
+seeded draw functions, and `given` becomes a `pytest.mark.parametrize`
+over a fixed number of pre-drawn examples — deterministic across runs,
+and fixture injection keeps working because parametrize matches argument
+names (`given`'s positional strategies map to the test's rightmost
+parameters, same as hypothesis).
+"""
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+except ModuleNotFoundError:
+    import inspect
+    import random
+    import string
+
+    import pytest
+
+    N_EXAMPLES = 12
+    _SEED = 0xA11CE
+
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(1000):
+                    v = self.draw(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate too restrictive")
+            return _Strategy(draw)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self.draw(rng)))
+
+
+    class st:  # noqa: N801  (mimics `hypothesis.strategies` module surface)
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def text(alphabet=string.ascii_lowercase + string.digits,
+                 min_size=0, max_size=12):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return "".join(rng.choice(alphabet) for _ in range(n))
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10, unique=False):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                out = []
+                for _ in range(50 * max(n, 1)):
+                    if len(out) >= n:
+                        break
+                    v = elem.draw(rng)
+                    if unique and v in out:
+                        continue
+                    out.append(v)
+                # tiny unique domain: degrade to the elements that exist
+                # (hypothesis would shrink the same way); only a domain with
+                # nothing to draw at all is a hard error
+                if not out and min_size > 0:
+                    raise ValueError("cannot draw any unique elements")
+                return out
+            return _Strategy(draw)
+
+
+    def given(*strategies):
+        def deco(fn):
+            params = list(inspect.signature(fn).parameters)
+            names = params[-len(strategies):]
+            rng = random.Random(_SEED)
+            # single argname: parametrize expects bare values, not 1-tuples
+            examples = [strategies[0].draw(rng) if len(strategies) == 1
+                        else tuple(s.draw(rng) for s in strategies)
+                        for _ in range(N_EXAMPLES)]
+            return pytest.mark.parametrize(",".join(names), examples)(fn)
+        return deco
+
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX smoke: outside the tier-1 budget
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

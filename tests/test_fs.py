@@ -3,7 +3,8 @@ partial overwrites, and a property-based random-IO oracle test."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from proptest import given, settings, st
 
 from repro.core import Errno, FSError, InodeKind
 from conftest import CHUNK, make_cluster, make_fs

@@ -1,6 +1,6 @@
 """Consistent hashing invariants (property-based)."""
 
-from hypothesis import given, settings, strategies as st
+from proptest import given, settings, st
 
 from repro.core import HashRing
 

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX smoke: outside the tier-1 budget
+
 from repro.kernels import ops, ref
 
 rng = np.random.default_rng(42)

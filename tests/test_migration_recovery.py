@@ -1,0 +1,196 @@
+"""Refactored migration + dirty-eviction paths: ring change mid-dirty-write,
+migrate_out → rpc_migrate_recv_* round-trips, and crash-at-injection-point
+replay through the participant module."""
+
+import numpy as np
+import pytest
+
+from repro.core import Cmd, HashRing, InodeKind
+from repro.core.net import SimCrash
+from repro.core.types import chunk_key, meta_key
+from conftest import CHUNK, make_cluster, make_fs
+
+
+def _blob(n, seed=0):
+    return bytes(np.random.default_rng(seed).integers(0, 256, size=n,
+                                                      dtype=np.uint8))
+
+
+# =========================================================================
+# ring change mid-dirty-write
+# =========================================================================
+def test_ring_change_mid_dirty_write(workdir):
+    """A node joins while a file is dirty and its handle still open; the
+    dirty state migrates, the client re-pulls the node list on ESTALE, and
+    both the cache view and the eventual COS upload stay consistent."""
+    cl = make_cluster(workdir, n=2)
+    fs = make_fs(cl)
+    first = _blob(2 * CHUNK + 99, 1)
+    fh = fs.open("/b/mid.bin", "w")
+    fs.write(fh, 0, first)
+    assert cl.dirty_counts()["dirty_metas"] >= 1
+
+    st = cl.add_node()          # ring changes while the write is in flight
+    assert st.op == "join"
+    second = _blob(CHUNK, 2)
+    fs.write(fh, len(first), second)      # continues after ESTALE re-pull
+    fs.close(fh)
+
+    assert fs.read_file("/b/mid.bin") == first + second
+    cl.drain_dirty()
+    assert cl.cos.get_object("b", "mid.bin")[0] == first + second
+    # the file's chunks are clean again (dirs stay dirty until zero-scale)
+    assert cl.dirty_counts()["dirty_chunks"] == 0
+    cl.close()
+
+
+# =========================================================================
+# migrate_out → rpc_migrate_recv_* round-trip
+# =========================================================================
+def test_migrate_out_recv_roundtrip(workdir):
+    """Drain one node via the migration subsystem directly: dirty metadata
+    and chunks land on their new owners with bytes intact, directories always
+    move, and the source evicts everything it sent or dropped."""
+    cl = make_cluster(workdir, n=3)
+    fs = make_fs(cl)
+    fs.mkdir("/b/sub")
+    data = _blob(2 * CHUNK + 7, 3)
+    fs.write_file("/b/sub/f.bin", data)
+
+    src_name = cl.node_list()[0]
+    src = cl.servers[src_name]
+    new_ring = HashRing([n for n in cl.node_list() if n != src_name])
+    scan = src.migration_scan(new_ring)
+    # every dir this node owns must be scheduled to move, never dropped
+    owned_dirs = [ino for ino, m in src.metas.inodes.items()
+                  if m.kind == InodeKind.DIR
+                  and src.ring.node_for(meta_key(ino)) == src_name]
+    assert sorted(ino for ino, _ in scan["dirs"]) == sorted(owned_dirs)
+
+    moved, t = src.migrate_out(scan, cl.clock.now)
+    cl.clock.advance_to(t)
+
+    for ino, dst in scan["metas"] + scan["dirs"]:
+        assert src.metas.get(ino) is None          # evicted at the source
+        got = cl.servers[dst].metas.get(ino)
+        assert got is not None and got.ino == ino  # landed at the new owner
+    for (ino, coff), dst in scan["chunks"]:
+        assert src.chunks.get(ino, coff) is None
+        c = cl.servers[dst].chunks.get(ino, coff)
+        assert c is not None and c.dirty
+        assert new_ring.node_for(chunk_key(ino, coff)) == dst
+    for ino in scan["drop_metas"]:
+        assert src.metas.get(ino) is None
+    for (ino, coff) in scan["drop_chunks"]:
+        assert src.chunks.get(ino, coff) is None
+    assert moved["dirs"] == len(scan["dirs"])
+    assert moved["chunks"] == len(scan["chunks"])
+    cl.close()
+
+
+def test_migrate_recv_chunk_is_wal_durable(workdir):
+    """A migrated-in chunk must survive a crash of the receiver: the
+    MIGRATE_RECV_CHUNK record replays through the participant module."""
+    cl = make_cluster(workdir, n=2)
+    nodes = cl.node_list()
+    payload = _blob(CHUNK // 2, 4)
+    res, t = cl.router.rpc(nodes[0], nodes[1], "rpc_migrate_recv_chunk",
+                           cl.clock.now, nbytes_out=len(payload) + 128,
+                           ino=4242, chunk_off=0, version=3, dirty=True,
+                           deleted=False, data=payload)
+    assert res["ok"]
+    cl.clock.advance_to(t)
+    recv = cl.servers[nodes[1]]
+    cl.crash_node(nodes[1])
+    cl.restart_node(nodes[1])
+    c = recv.chunks.get(4242, 0)
+    assert c is not None and c.dirty and c.version == 3
+    assert c.materialize(recv.raft, len(payload)) == payload
+    cl.close()
+
+
+def test_dirty_eviction_only_after_persist(workdir):
+    """migration_scan drops clean objects (refetchable from COS) but keeps
+    dirty ones; after a persist cycle the same objects become droppable."""
+    cl = make_cluster(workdir, n=2)
+    fs = make_fs(cl)
+    data = _blob(CHUNK + 11, 5)
+    fs.write_file("/b/e.bin", data)
+
+    other = {n: cl.node_list()[1 - i] for i, n in enumerate(cl.node_list())}
+    dirty_migrating = {
+        nm: len(s.migration_scan(HashRing([other[nm]]))["metas"])
+        + len(s.migration_scan(HashRing([other[nm]]))["chunks"])
+        for nm, s in cl.servers.items()}
+    assert sum(dirty_migrating.values()) >= 1   # dirty state must migrate
+
+    cl.drain_dirty()                            # ... until it is persisted
+    for nm, s in cl.servers.items():
+        scan = s.migration_scan(HashRing([other[nm]]))
+        assert scan["metas"] == [] and scan["chunks"] == []
+    cl.close()
+
+
+# =========================================================================
+# crash-at-injection-point replay through the participant module
+# =========================================================================
+def _prepare(server, txid_seq, keys, ops):
+    return server.rpc_prepare(
+        0.0, txid_p={"client_id": 11, "seq": txid_seq, "txseq": txid_seq},
+        cmd_id=int(Cmd.TX_PREPARE_META), ops=ops, keys=keys)
+
+
+def test_crash_after_lock_before_prepare_leaves_no_lock(workdir):
+    """participant_after_lock fires between lock acquisition and the WAL
+    append: nothing was logged, so replay must NOT re-acquire the lock."""
+    cl = make_cluster(workdir, n=2)
+    p = cl.servers[cl.node_list()[1]]
+    p.arm_crash("participant_after_lock")
+    with pytest.raises(SimCrash):
+        _prepare(p, 1, ["lk"], [])
+    cl.restart_node(p.node_id)
+    assert p.locks.holder("lk") is None
+    # a fresh prepare for the same key now succeeds
+    res, _ = _prepare(p, 2, ["lk"], [])
+    assert res["vote"] is True
+    cl.close()
+
+
+def test_crash_after_prepare_replays_lock_and_redo(workdir):
+    """participant_after_prepare fires after the WAL append: replay must
+    re-acquire the lock and keep the redo image unapplied until commit."""
+    from repro.core import InodeMeta
+    cl = make_cluster(workdir, n=2)
+    p = cl.servers[cl.node_list()[1]]
+    meta = InodeMeta(ino=8808, kind=InodeKind.FILE, size=77)
+    op = {"kind": "meta_put", "meta": meta.to_payload()}
+    p.arm_crash("participant_after_prepare")
+    with pytest.raises(SimCrash):
+        _prepare(p, 1, ["pk"], [op])
+    cl.restart_node(p.node_id)
+    assert p.locks.holder("pk") is not None   # lock restored by replay
+    assert p.metas.get(8808) is None          # prepared, not applied
+    p.rpc_commit(0.0, txid_p={"client_id": 11, "seq": 1, "txseq": 1})
+    assert p.metas.get(8808).size == 77
+    assert p.locks.holder("pk") is None
+    cl.close()
+
+
+def test_crash_after_commit_dedups_on_retry(workdir):
+    """participant_after_commit fires after the commit is logged: the apply
+    survives replay and a retried commit answers from the dedup window."""
+    from repro.core import InodeMeta
+    cl = make_cluster(workdir, n=2)
+    p = cl.servers[cl.node_list()[1]]
+    meta = InodeMeta(ino=8809, kind=InodeKind.FILE, size=99)
+    op = {"kind": "meta_put", "meta": meta.to_payload()}
+    res, _ = _prepare(p, 1, ["ck"], [op])
+    assert res["vote"] is True
+    p.arm_crash("participant_after_commit")
+    with pytest.raises(SimCrash):
+        p.rpc_commit(0.0, txid_p={"client_id": 11, "seq": 1, "txseq": 1})
+    cl.restart_node(p.node_id)
+    assert p.metas.get(8809).size == 99       # commit applied via replay
+    res, _ = p.rpc_commit(0.0, txid_p={"client_id": 11, "seq": 1, "txseq": 1})
+    assert res == {"ok": True, "dup": True}
+    cl.close()

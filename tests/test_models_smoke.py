@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX smoke: outside the tier-1 budget
+
 from repro import configs
 from repro.models import build_model
 from repro.models.lm import frontend_dim

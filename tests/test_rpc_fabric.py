@@ -1,0 +1,115 @@
+"""Typed RPC dispatch fabric: registry completeness, unknown-method errors,
+declared payload defaults, and per-method stats accounting."""
+
+import pytest
+
+from repro.core import SimTimeout, UnknownRpcError
+from conftest import make_cluster, make_fs
+
+EXPECTED_METHODS = {
+    # read path (server façade)
+    "rpc_getattr", "rpc_lookup", "rpc_readdir", "rpc_read_chunk",
+    "rpc_nodelist", "rpc_stage_write",
+    # participant
+    "rpc_prepare", "rpc_commit", "rpc_abort",
+    # coordinator
+    "coord_create", "coord_load_dir", "coord_flush_write", "coord_unlink",
+    "coord_rename", "coord_truncate",
+    # persist
+    "coord_persist", "rpc_upload_part", "rpc_clear_chunk_dirty",
+    # migration
+    "rpc_set_read_only", "rpc_migrate_recv_meta", "rpc_migrate_recv_chunk",
+}
+
+
+def test_registry_contains_all_wire_methods(workdir):
+    cl = make_cluster(workdir, n=2)
+    for nm in cl.node_list():
+        assert set(cl.router.registered_methods(nm)) == EXPECTED_METHODS
+    cl.close()
+
+
+def test_unknown_method_raises_not_getattr(workdir):
+    cl = make_cluster(workdir, n=2)
+    nm = cl.node_list()[0]
+    with pytest.raises(UnknownRpcError):
+        cl.router.rpc(None, nm, "coord_execute", cl.clock.now)  # not wired
+    with pytest.raises(UnknownRpcError):
+        cl.router.rpc(None, nm, "restart", cl.clock.now)  # lifecycle, not RPC
+    # a typo'd name on a *crashed* node is still a programming error, not a
+    # timeout — and it must not leave a phantom entry in the method stats
+    other = cl.node_list()[1]
+    cl.crash_node(other)
+    with pytest.raises(UnknownRpcError):
+        cl.router.rpc(None, other, "rpc_stage_writ", cl.clock.now)
+    assert "rpc_stage_writ" not in cl.router.method_stats
+    cl.close()
+
+
+def test_declared_payload_sizes_are_defaults(workdir):
+    cl = make_cluster(workdir, n=2)
+    nm = cl.node_list()[0]
+    spec = cl.router.handlers[nm]["rpc_nodelist"][1]
+    before = cl.router.rpc_bytes
+    _, t = cl.router.rpc(None, nm, "rpc_nodelist", cl.clock.now)
+    assert cl.router.rpc_bytes - before == spec.request_bytes + spec.reply_bytes
+    # explicit sizes still win over the declared defaults
+    before = cl.router.rpc_bytes
+    _, t = cl.router.rpc(None, nm, "rpc_nodelist", t,
+                         nbytes_out=1000, nbytes_in=2000)
+    assert cl.router.rpc_bytes - before == 3000
+    cl.close()
+
+
+def test_per_method_stats_recorded(workdir):
+    cl = make_cluster(workdir, n=2)
+    fs = make_fs(cl)
+    fs.write_file("/b/s.bin", b"x" * 1024)
+    assert fs.read_file("/b/s.bin") == b"x" * 1024
+
+    stats = cl.rpc_stats()
+    for method in ("rpc_stage_write", "coord_flush_write", "coord_create",
+                   "rpc_getattr", "rpc_read_chunk"):
+        assert stats[method]["calls"] >= 1, method
+        assert stats[method]["bytes"] > 0, method
+        assert stats[method]["vtime"] >= 0.0, method
+    # the same counters land in the destination server's stats dict
+    per_server = [s.stats.get("rpc.rpc_stage_write.calls", 0)
+                  for s in cl.servers.values()]
+    assert sum(per_server) == stats["rpc_stage_write"]["calls"]
+    cl.close()
+
+
+def test_handler_errors_counted_separately(workdir):
+    """A handler that raises must not count as a completed call — the
+    per-server/global `calls` invariant holds across failed dispatches."""
+    from repro.core import FSError
+    cl = make_cluster(workdir, n=2)
+    nm = cl.node_list()[0]
+    with pytest.raises(FSError):   # ENOENT from rpc_getattr
+        cl.router.rpc(None, nm, "rpc_getattr", cl.clock.now, ino=999999)
+    ms = cl.router.method_stats["rpc_getattr"]
+    assert ms["errors"] == 1 and ms["calls"] == 0
+    assert cl.servers[nm].stats.get("rpc.rpc_getattr.calls", 0) == 0
+    cl.close()
+
+
+def test_timeouts_counted_per_method(workdir):
+    cl = make_cluster(workdir, n=2)
+    victim = cl.node_list()[1]
+    cl.crash_node(victim)
+    with pytest.raises(SimTimeout):
+        cl.router.rpc(None, victim, "rpc_nodelist", cl.clock.now)
+    assert cl.router.method_stats["rpc_nodelist"]["timeouts"] == 1
+    assert cl.router.method_stats["rpc_nodelist"]["calls"] == 0
+    cl.close()
+
+
+def test_unregister_removes_dispatch_entries(workdir):
+    cl = make_cluster(workdir, n=2)
+    victim = cl.node_list()[1]
+    cl.router.unregister(victim)
+    assert cl.router.registered_methods(victim) == []
+    with pytest.raises(SimTimeout):   # unreachable before dispatch lookup
+        cl.router.rpc(None, victim, "rpc_nodelist", cl.clock.now)
+    cl.close()
