@@ -32,6 +32,38 @@ def _mkdirs(fs):
         fs.makedirs(f"/bench/d{d}")
 
 
+def _drain_1024(rep: dict, quiet: bool) -> None:
+    """Paper-scale dirty-drain (1024 files, §5.2): serial `coord_persist`
+    chain vs the pipelined background flusher, same data both times."""
+    n_files = 1024
+    out: dict = {"files": n_files}
+    for mode in ("serial", "pipelined"):
+        wd = tempfile.mkdtemp(prefix=f"bench-drain-{mode}-")
+        cl = make_cluster(wd, n=8)
+        fs = make_fs(cl)
+        _mkdirs(fs)
+        rng = np.random.default_rng(1)
+        total = 0
+        for i in range(n_files):
+            sz = int(rng.integers(64, 512)) << 10
+            total += sz
+            fs.write_file(f"/bench/d{i % N_DIRS}/f{i}.bin", blob(sz, i))
+        t0 = cl.clock.now
+        cl.drain_dirty(serial=(mode == "serial"), max_rounds=64)
+        out[f"{mode}_s"] = round(cl.clock.now - t0, 6)
+        if mode == "pipelined":
+            out["flusher"] = cl.flusher.stats()
+        out["total_mb"] = round(total / 1e6, 1)
+        cl.close()
+        shutil.rmtree(wd, ignore_errors=True)
+    out["speedup"] = round(out["serial_s"] / max(out["pipelined_s"], 1e-9), 2)
+    rep["drain_1024"] = out
+    if not quiet:
+        print(f"[fig12+] drain 1024 dirty files ({out['total_mb']} MB): "
+              f"serial {out['serial_s']:.2f}s -> pipelined "
+              f"{out['pipelined_s']:.2f}s ({out['speedup']}x)")
+
+
 def run(quiet: bool = False) -> dict:
     rep: dict = {}
     # ---- scale UP with dirty files ---------------------------------------
@@ -77,6 +109,9 @@ def run(quiet: bool = False) -> dict:
     rep["trend_first_join_slowest"] = ups[0] >= max(ups[1:]) * 0.8
     rep["trend_clean_faster"] = (sum(ups_clean) < sum(ups)
                                  and sum(downs_clean) < sum(downs))
+
+    # ---- before/after: serial vs pipelined drain of 1024 dirty files ------
+    _drain_1024(rep, quiet)
     save_report("fig13_14_elasticity", rep)
     if not quiet:
         print(f"[fig13] up-dirty   "

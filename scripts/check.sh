@@ -10,3 +10,8 @@ python -m compileall -q src benchmarks tests
 
 echo "== tier-1 pytest =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+echo "== flush-bench smoke =="
+# drains 256 dirty files through the background flusher and fails on a
+# >20% virtual-time regression vs reports/bench/flush_smoke_baseline.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.flush_smoke --check

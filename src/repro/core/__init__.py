@@ -15,6 +15,7 @@ from .client import ClientConfig, ObjcacheClient
 from .cluster import Cluster, ScaleStats
 from .coordinator import Coordinator
 from .cos import CosError, CosStore
+from .flusher import BackgroundFlusher
 from .fs import ObjcacheFS
 from .hashring import HashRing
 from .migration import Migrator
@@ -24,17 +25,18 @@ from .participant import Participant
 from .persist import Persister
 from .raftlog import ChecksumError, RaftLog
 from .server import BucketMount, CacheServer, NODELIST_KEY, ServerConfig
-from .simclock import HardwareModel, Resource, SimClock
+from .simclock import HardwareModel, InflightWindow, Resource, SimClock
 from .state import ServerState
 from .types import (CHUNK_SIZE_DEFAULT, Cmd, Errno, FSError, InodeKind,
                     InodeMeta, ROOT_INODE, TxId)
 
 __all__ = [
-    "BucketMount", "CHUNK_SIZE_DEFAULT", "CacheServer", "ChecksumError",
-    "ClientConfig", "Cluster", "Cmd", "Coordinator", "CosError", "CosStore",
-    "Errno", "FSError", "HardwareModel", "HashRing", "InodeKind", "InodeMeta",
-    "Migrator", "NODELIST_KEY", "ObjcacheClient", "ObjcacheFS", "Participant",
-    "Persister", "ROOT_INODE", "Resource", "Router", "RaftLog", "RpcSpec",
-    "ScaleStats", "ServerConfig", "ServerState", "SimClock", "SimCrash",
-    "SimTimeout", "TxId", "UnknownRpcError", "rpc_handler",
+    "BackgroundFlusher", "BucketMount", "CHUNK_SIZE_DEFAULT", "CacheServer",
+    "ChecksumError", "ClientConfig", "Cluster", "Cmd", "Coordinator",
+    "CosError", "CosStore", "Errno", "FSError", "HardwareModel", "HashRing",
+    "InflightWindow", "InodeKind", "InodeMeta", "Migrator", "NODELIST_KEY",
+    "ObjcacheClient", "ObjcacheFS", "Participant", "Persister", "ROOT_INODE",
+    "Resource", "Router", "RaftLog", "RpcSpec", "ScaleStats", "ServerConfig",
+    "ServerState", "SimClock", "SimCrash", "SimTimeout", "TxId",
+    "UnknownRpcError", "rpc_handler",
 ]

@@ -341,6 +341,7 @@ class ObjcacheClient:
         pos = 0
         part = 0
         ends = []
+        bp_delay = 0.0
         t0 = self.clock.now
         while pos < len(data):
             abs_off = off + pos
@@ -358,11 +359,17 @@ class ObjcacheClient:
                 data=data[pos:pos + n], stage_id=stage_id,
                 nl_version=self.nl_version)
             ends.append(te)
+            bp_delay = max(bp_delay, res.get("bp_delay", 0.0))
             staged.setdefault(coff, []).append(stage_id)
             pos += n
             part += 1
         if ends:
             self.clock.advance_to(max(ends))
+        if bp_delay > 0.0:
+            # dirty-page backpressure (§5.2): the cluster is above its dirty
+            # high-watermark — stall this writer so the flusher can drain
+            self.clock.sleep(bp_delay)
+            self._bump("bp_stalls")
         self._bump("write_bytes", len(data))
         return [(c, ids) for c, ids in sorted(staged.items())]
 

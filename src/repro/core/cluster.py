@@ -24,10 +24,11 @@ import os
 from dataclasses import dataclass, field
 
 from .cos import CosStore
+from .flusher import BackgroundFlusher
 from .hashring import HashRing
 from .net import Router, SimCrash, SimTimeout
 from .server import BucketMount, CacheServer, NODELIST_KEY, ServerConfig
-from .simclock import HardwareModel, SimClock
+from .simclock import HardwareModel, InflightWindow, SimClock
 from .types import (Cmd, Errno, FSError, InodeKind, InodeMeta, ROOT_INODE,
                     chunk_key, meta_key)
 
@@ -71,6 +72,7 @@ class Cluster:
         self._uids: dict[str, int] = {}
         self._seq = 1
         self.scale_log: list[ScaleStats] = []
+        self.flusher = BackgroundFlusher(self)
         os.makedirs(workdir, exist_ok=True)
 
     # =====================================================================
@@ -242,22 +244,29 @@ class Cluster:
     def _persist_node_dirty(self, s: CacheServer, t: float
                             ) -> tuple[float, int]:
         """Upload every dirty inode `s` owns metadata or chunks for.  The
-        persisting coordinator is always the inode's metadata owner."""
+        persisting coordinator is always the inode's metadata owner.
+        Persists are pipelined through the flusher's in-flight window so
+        scale-down drains overlap uploads instead of serializing them."""
         inv = s.dirty_inventory()
         inos = set(inv["metas"]) | {ino for ino, _ in inv["chunks"]}
+        window = InflightWindow(self.cfg.flush_inflight)
+        ends: list[float] = []
         n = 0
         for ino in sorted(inos):
             owner = s.owner(meta_key(ino))
+            begin = window.admit(t)
             try:
-                res, t = self.router.rpc(None, owner, "coord_persist", t,
-                                         ino=ino,
-                                         client_id=_CLUSTER_CLIENT_ID,
-                                         seq=self._new_seq())
+                res, te = self.router.rpc(None, owner, "coord_persist", begin,
+                                          ino=ino,
+                                          client_id=_CLUSTER_CLIENT_ID,
+                                          seq=self._new_seq())
                 if res.get("outcome") in ("commit", "deleted", "dir"):
                     n += 1
             except (SimTimeout, SimCrash, FSError):
-                pass
-        return t, n
+                te = begin
+            window.settle(te)
+            ends.append(te)
+        return (max(ends) if ends else t), n
 
     def _commit_node_list(self, nodes: list[str], t: float,
                           exclude: str | None = None) -> float:
@@ -294,10 +303,15 @@ class Cluster:
     # =====================================================================
     # background write-back ("expiration of dirty objects", §5.2)
     # =====================================================================
-    def tick_flush(self, max_inodes: int | None = None) -> tuple[int, float]:
+    def tick_flush(self, max_inodes: int | None = None,
+                   serial: bool = False) -> tuple[int, float]:
         """Persist dirty inodes across the cluster; returns (count, t_end).
-        Virtual time: uploads occupy COS/NIC resource lanes, so foreground
-        work issued meanwhile naturally overlaps (Fig. 12)."""
+        Default path is the pipelined `BackgroundFlusher` (bounded-window
+        concurrent persists); `serial=True` keeps the pre-pipeline behaviour
+        of threading one virtual time through every inode, retained as the
+        before/after baseline for the elasticity reports."""
+        if not serial:
+            return self.flusher.tick(max_inodes=max_inodes)
         t = self.clock.now
         done = 0
         seen: set[int] = set()
@@ -328,10 +342,18 @@ class Cluster:
                     return done, t
         return done, t
 
-    def drain_dirty(self, max_rounds: int = 8) -> int:
+    def poll_flush(self) -> tuple[int, float]:
+        """Interval-driven flush: runs a pipelined pass only when
+        `flush_interval_s` has elapsed on the simclock (or the cluster is
+        above its dirty high-watermark)."""
+        return self.flusher.poll()
+
+    def drain_dirty(self, max_rounds: int = 8, serial: bool = False) -> int:
+        if not serial:
+            return self.flusher.drain(max_rounds=max_rounds)
         total = 0
         for _ in range(max_rounds):
-            n, t = self.tick_flush()
+            n, t = self.tick_flush(serial=True)
             self.clock.advance_to(t)
             total += n
             if n == 0:
@@ -347,7 +369,9 @@ class Cluster:
     def dirty_counts(self) -> dict:
         metas = sum(len(s.metas.dirty_inos()) for s in self.servers.values())
         chunks = sum(len(s.chunks.dirty_keys()) for s in self.servers.values())
-        return {"dirty_metas": metas, "dirty_chunks": chunks}
+        out = {"dirty_metas": metas, "dirty_chunks": chunks}
+        out.update(self.flusher.stats())  # per-tick flusher observability
+        return out
 
     def rpc_stats(self) -> dict[str, dict[str, float]]:
         """Per-method RPC fabric stats (calls / bytes / vtime / timeouts)

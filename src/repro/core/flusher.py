@@ -1,0 +1,169 @@
+"""Pipelined background write-back — the flusher behind §5.2 / Figs. 12-14.
+
+`BackgroundFlusher` is the cluster's "expiration of dirty objects" engine.
+Where the old `Cluster.tick_flush` threaded one virtual time `t` through
+every dirty inode (each `coord_persist` waited for the previous one), the
+flusher schedules persists *concurrently*: every coordinator is dispatched
+through a bounded `InflightWindow` (``flush_inflight``), so COS connections
+and node NICs carry many uploads at once and the virtual-time drain of N
+dirty files approaches N / window instead of N.
+
+Two policies ride on top of the pipeline:
+
+* **dirty-page backpressure** — when a node's dirty bytes exceed
+  ``dirty_hiwater_bytes``, its `rpc_stage_write` replies carry a stall hint
+  that clients honour before issuing more foreground writes (client.py), and
+  the flusher switches to priority eviction;
+* **priority eviction** — above the watermark, candidates are ordered
+  coldest-first (oldest mtime), largest-first, so each flushed inode frees
+  the most cache for the longest time; below it, FIFO by inode id preserves
+  the old behaviour.
+
+The flusher is *driven* by `flush_interval_s` on the simclock: `poll()` runs
+a tick only when the interval has elapsed, so callers can invoke it after
+every foreground operation without over-flushing; `tick()` forces one pass;
+`drain()` loops until no dirty state remains.  Everything it does is
+observable through `counters` (inodes flushed, bytes uploaded, backpressure
+stalls, priority picks), which `Cluster.dirty_counts()` and the benchmark
+reports embed.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from .net import SimCrash, SimTimeout
+from .simclock import InflightWindow
+from .types import FSError, InodeKind, ROOT_INODE, meta_key
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .cluster import Cluster
+
+_CLUSTER_CLIENT_ID = 0  # reserved transaction client id for the operator
+
+
+class BackgroundFlusher:
+    def __init__(self, cluster: "Cluster") -> None:
+        self.cluster = cluster
+        self.last_tick_t = 0.0
+        self.counters: dict[str, float] = {
+            "ticks": 0, "inodes_flushed": 0, "bytes_uploaded": 0,
+            "backpressure_stalls": 0, "eviction_priority_picks": 0,
+            "flush_errors": 0,
+        }
+
+    # =====================================================================
+    # candidate selection
+    # =====================================================================
+    def _candidates(self) -> list[tuple[str, int, int, float]]:
+        """Flushable dirty inodes as (coordinator_node, ino, size, mtime).
+        Same eligibility rules as the serial path: the metadata owner
+        coordinates, only COS-backed inodes flush, live directories persist
+        only at zero scale."""
+        cl = self.cluster
+        out: list[tuple[str, int, int, float]] = []
+        seen: set[int] = set()
+        for s in list(cl.servers.values()):
+            if not s.alive:
+                continue
+            for ino in list(s.metas.dirty_inos()):
+                if ino in seen or ino == ROOT_INODE:
+                    continue
+                m = s.metas.get(ino)
+                if m is None or s.owner(meta_key(ino)) != s.node_id:
+                    continue
+                if m.cos_bucket is None or m.cos_key is None:
+                    continue
+                if m.kind == InodeKind.DIR and not m.deleted:
+                    continue
+                seen.add(ino)
+                out.append((s.node_id, ino, m.size, m.mtime))
+        return out
+
+    def dirty_bytes(self) -> int:
+        return sum(s.state.dirty_bytes()
+                   for s in self.cluster.servers.values() if s.alive)
+
+    def under_pressure(self) -> bool:
+        """True when any node exceeds its dirty high-watermark — the same
+        per-node threshold `rpc_stage_write` uses for client stall hints."""
+        hi = self.cluster.cfg.dirty_hiwater_bytes
+        return hi > 0 and any(s.state.dirty_bytes() > hi
+                              for s in self.cluster.servers.values()
+                              if s.alive)
+
+    # =====================================================================
+    # pipelined flush pass
+    # =====================================================================
+    def tick(self, max_inodes: int | None = None) -> tuple[int, float]:
+        """One pipelined flush pass; returns (flushed_count, t_end).
+
+        All selected persists start from the current virtual time and run
+        concurrently through the in-flight window; the pass completes at the
+        latest persist's completion.  Foreground traffic issued meanwhile
+        overlaps naturally on the shared resource lanes (Fig. 12)."""
+        cl = self.cluster
+        start = cl.clock.now
+        self.counters["ticks"] += 1
+        self.last_tick_t = start
+        cands = self._candidates()
+        pressured = self.under_pressure()
+        if pressured:
+            # priority eviction: coldest (oldest mtime) first, then largest
+            cands.sort(key=lambda c: (c[3], -c[2], c[1]))
+        else:
+            cands.sort(key=lambda c: c[1])
+        if max_inodes is not None:
+            cands = cands[:max_inodes]
+        window = InflightWindow(cl.cfg.flush_inflight)
+        ends: list[float] = []
+        done = 0
+        for node, ino, size, _mtime in cands:
+            begin = window.admit(start)
+            try:
+                res, te = cl.router.rpc(None, node, "coord_persist", begin,
+                                        ino=ino,
+                                        client_id=_CLUSTER_CLIENT_ID,
+                                        seq=cl._new_seq())
+                if res.get("outcome") in ("commit", "deleted"):
+                    done += 1
+                    self.counters["inodes_flushed"] += 1
+                    self.counters["bytes_uploaded"] += size
+                    if pressured:
+                        self.counters["eviction_priority_picks"] += 1
+            except (SimTimeout, SimCrash, FSError):
+                self.counters["flush_errors"] += 1
+                te = cl.router.charge_timeout(begin)
+            window.settle(te)
+            ends.append(te)
+        t = max(ends) if ends else start
+        # server-side stall hints issued since the last aggregation
+        self.counters["backpressure_stalls"] = sum(
+            s.stats.get("bp_stalls", 0) for s in cl.servers.values())
+        return done, t
+
+    def poll(self) -> tuple[int, float]:
+        """Interval-driven entry point: flush only when `flush_interval_s`
+        has elapsed on the simclock (or immediately under backpressure)."""
+        cl = self.cluster
+        due = self.last_tick_t + cl.cfg.flush_interval_s
+        if cl.clock.now < due and not self.under_pressure():
+            return 0, cl.clock.now
+        return self.tick()
+
+    def drain(self, max_rounds: int = 8) -> int:
+        """Flush until no eligible dirty inode remains; returns total."""
+        cl = self.cluster
+        total = 0
+        for _ in range(max_rounds):
+            n, t = self.tick()
+            cl.clock.advance_to(t)
+            total += n
+            if n == 0:
+                break
+        return total
+
+    def stats(self) -> dict[str, float]:
+        out = dict(self.counters)
+        out["dirty_bytes"] = self.dirty_bytes()
+        return out

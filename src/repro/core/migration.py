@@ -13,6 +13,7 @@ from __future__ import annotations
 from .hashring import HashRing
 from .net import rpc_handler
 from .participant import Participant
+from .simclock import InflightWindow
 from .state import ServerState
 from .stores import ChunkState, Segment
 from .types import Cmd, InodeKind, InodeMeta, chunk_key, meta_key
@@ -64,37 +65,64 @@ class Migrator:
         return out
 
     def migrate_out(self, scan: dict, start: float) -> tuple[dict, float]:
-        """Push scanned objects to their new owners; evict moved + dropped."""
+        """Push scanned objects to their new owners; evict moved + dropped.
+
+        Sends are pipelined: batched per destination and dispatched through
+        a bounded in-flight window so transfers to different receivers (and
+        multiple chunks to the same receiver, up to its NIC lanes) overlap
+        on the network resource instead of serializing in virtual time.
+        Each source-side EVICT is logged at its send's completion, so replay
+        still reconstructs the same end state."""
         st = self.state
-        t = start
         moved = {"metas": 0, "dirs": 0, "chunks": 0, "bytes": 0}
+        window = InflightWindow(st.cfg.migrate_inflight)
+        ends: list[float] = []
+
+        # batch per destination: all of one receiver's metas/chunks are
+        # enqueued adjacently so its NIC lanes stay saturated
+        metas_by_dst: dict[str, list[int]] = {}
         for ino, dst in scan["dirs"] + scan["metas"]:
-            m = st.metas.get(ino)
-            if m is None:
-                continue
-            is_dir = m.kind == InodeKind.DIR
-            _, t = st.router.rpc(
-                st.node_id, dst, "rpc_migrate_recv_meta", t,
-                nbytes_out=len(str(m.to_payload())) + 64,
-                meta=m.to_payload(), is_dir=is_dir)
-            t = self.wal.log(Cmd.EVICT_META, {"ino": ino}, t)
-            moved["dirs" if is_dir else "metas"] += 1
-        for (ino, coff), dst in scan["chunks"]:
-            c = st.chunks.get(ino, coff)
-            if c is None:
-                continue
-            data = c.materialize(st.raft, max(s.off + s.length for s in
-                                              c.base_filled + c.segments)) \
-                if (c.base_filled or c.segments) else b""
-            _, t = st.router.rpc(
-                st.node_id, dst, "rpc_migrate_recv_chunk", t,
-                nbytes_out=len(data) + 128,
-                ino=ino, chunk_off=coff, version=c.version, dirty=c.dirty,
-                deleted=c.deleted, data=data)
-            t = self.wal.log(Cmd.EVICT_CHUNK, {"ino": ino, "chunk_off": coff},
-                             t)
-            moved["chunks"] += 1
-            moved["bytes"] += len(data)
+            metas_by_dst.setdefault(dst, []).append(ino)
+        chunks_by_dst: dict[str, list[tuple[int, int]]] = {}
+        for key, dst in scan["chunks"]:
+            chunks_by_dst.setdefault(dst, []).append(key)
+
+        for dst in sorted(metas_by_dst):
+            for ino in metas_by_dst[dst]:
+                m = st.metas.get(ino)
+                if m is None:
+                    continue
+                is_dir = m.kind == InodeKind.DIR
+                begin = window.admit(start)
+                _, te = st.router.rpc(
+                    st.node_id, dst, "rpc_migrate_recv_meta", begin,
+                    nbytes_out=len(str(m.to_payload())) + 64,
+                    meta=m.to_payload(), is_dir=is_dir)
+                te = self.wal.log(Cmd.EVICT_META, {"ino": ino}, te)
+                window.settle(te)
+                ends.append(te)
+                moved["dirs" if is_dir else "metas"] += 1
+        for dst in sorted(chunks_by_dst):
+            for ino, coff in chunks_by_dst[dst]:
+                c = st.chunks.get(ino, coff)
+                if c is None:
+                    continue
+                data = c.materialize(st.raft, max(s.off + s.length for s in
+                                                  c.base_filled + c.segments)) \
+                    if (c.base_filled or c.segments) else b""
+                begin = window.admit(start)
+                _, te = st.router.rpc(
+                    st.node_id, dst, "rpc_migrate_recv_chunk", begin,
+                    nbytes_out=len(data) + 128,
+                    ino=ino, chunk_off=coff, version=c.version, dirty=c.dirty,
+                    deleted=c.deleted, data=data)
+                te = self.wal.log(Cmd.EVICT_CHUNK,
+                                  {"ino": ino, "chunk_off": coff}, te)
+                window.settle(te)
+                ends.append(te)
+                moved["chunks"] += 1
+                moved["bytes"] += len(data)
+        t = max(ends) if ends else start
         for ino in scan["drop_metas"]:
             t = self.wal.log(Cmd.EVICT_META, {"ino": ino}, t)
         for (ino, coff) in scan["drop_chunks"]:

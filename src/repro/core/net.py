@@ -149,13 +149,19 @@ class Router:
 
     def rpc(self, src: str | None, dst: str, method: str, start: float,
             nbytes_out: int | None = None, nbytes_in: int | None = None,
-            embedded_local: bool = False, **kwargs: Any) -> tuple[Any, float]:
+            nbytes_extra: int = 0, embedded_local: bool = False,
+            **kwargs: Any) -> tuple[Any, float]:
         """Invoke registered handler `method` on server `dst`.
 
         The handler signature is `m(start: float, **kwargs) -> (result,
         end_time)`.  Returns the result and the time the reply lands back at
         the caller.  Payload sizes default to the handler's declared
-        `RpcSpec` when not passed explicitly."""
+        `RpcSpec` when not passed explicitly.  `nbytes_extra` declares
+        payload bytes the handler moves on *other* resources on behalf of
+        this call (e.g. a chunk-owner's MPU part upload straight to COS):
+        they count toward the method's byte accounting so `rpc_stats()` is
+        truthful about where the data goes, but are not charged to the
+        src->dst NIC transfer, which only carries the control message."""
         # a bad method name is a programming error even when the node is
         # down — surface it before (and without) any timeout accounting
         node_handlers = self.handlers.get(dst)
@@ -184,16 +190,17 @@ class Router:
         latency = back - start
         # all call counters (legacy globals + per-method + per-server) count
         # *completed* dispatches; failures land in timeouts/errors above
+        n_total = n_out + n_in + max(0, nbytes_extra)
         self.rpc_count += 1
-        self.rpc_bytes += n_out + n_in
+        self.rpc_bytes += n_total
         mstat = self._mstat(method)
         mstat["calls"] += 1
-        mstat["bytes"] += n_out + n_in
+        mstat["bytes"] += n_total
         mstat["vtime"] += latency
         k_calls, k_bytes, k_vtime = self._stat_keys(method)
         sstats = server.stats
         sstats[k_calls] = sstats.get(k_calls, 0) + 1
-        sstats[k_bytes] = sstats.get(k_bytes, 0) + n_out + n_in
+        sstats[k_bytes] = sstats.get(k_bytes, 0) + n_total
         sstats[k_vtime] = sstats.get(k_vtime, 0.0) + latency
         return result, back
 

@@ -104,9 +104,15 @@ class Participant:
             if info is not None:
                 info["decided"] = "abort"
             st.coord_done[(p["client_id"], p["seq"])] = (p["txseq"], "abort")
-        elif cmd in (Cmd.MPU_BEGIN_RECORDED, Cmd.MPU_COMMITTED,
-                     Cmd.PUT_OBJECT_DONE, Cmd.COS_DELETE_DONE):
-            pass  # audit records consumed by recovery (abort orphan MPUs)
+        elif cmd == Cmd.MPU_BEGIN_RECORDED:
+            # tracked until MPU_COMMITTED/MPU_ABORTED so a restarted
+            # coordinator aborts the orphan upload (recover_orphan_mpus)
+            st.mpu_pending[p["upload_id"]] = {
+                "ino": p["ino"], "bucket": p["bucket"], "key": p["key"]}
+        elif cmd in (Cmd.MPU_COMMITTED, Cmd.MPU_ABORTED):
+            st.mpu_pending.pop(p["upload_id"], None)
+        elif cmd in (Cmd.PUT_OBJECT_DONE, Cmd.COS_DELETE_DONE):
+            pass  # audit records
         elif cmd in (Cmd.DIRTY_CLEARED_CHUNK,):
             c = st.chunks.get(p["ino"], p["chunk_off"])
             if c is not None and c.version == p["version"]:

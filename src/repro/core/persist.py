@@ -15,6 +15,7 @@ from __future__ import annotations
 from .cos import CosError
 from .net import SimCrash, SimTimeout, rpc_handler
 from .participant import Participant
+from .simclock import InflightWindow
 from .state import ServerState
 from .types import Cmd, Errno, FSError, InodeKind, InodeMeta, chunk_key
 
@@ -75,7 +76,9 @@ class Persister:
             st.bump("persist_put")
             return {"outcome": "commit"}, t
 
-        # MPU path: begin -> record key -> parallel part adds by chunk owners
+        # MPU path: begin -> record key -> pipelined part adds by chunk
+        # owners.  Parts fan out so they occupy COS/NIC lanes simultaneously,
+        # bounded by the configurable in-flight window (persist_part_window).
         try:
             upload_id, t = st.cos.mpu_begin(m.cos_bucket, m.cos_key, start=t)
         except CosError:
@@ -84,34 +87,40 @@ class Persister:
                          {"ino": ino, "upload_id": upload_id,
                           "bucket": m.cos_bucket, "key": m.cos_key}, t)
         st.crash_at("persist_after_mpu_begin")
+        window = InflightWindow(st.cfg.persist_part_window)
         ends, ok = [], True
         for part_no, coff in enumerate(offsets, start=1):
             owner = st.owner(chunk_key(ino, coff))
             ln = min(st.cfg.chunk_size, m.size - coff)
+            begin = window.admit(t)
             try:
                 if owner == st.node_id:
-                    data, te = self.materialize_local(ino, coff, m, t)
+                    data, te = self.materialize_local(ino, coff, m, begin)
                     te = st.cos.mpu_add(upload_id, part_no, data, start=te)
                 else:
+                    # the part payload travels owner->COS inside the handler;
+                    # declare it so fabric byte accounting stays truthful
                     _, te = st.router.rpc(
-                        st.node_id, owner, "rpc_upload_part", t,
-                        nbytes_out=256, ino=ino, chunk_off=coff, length=ln,
+                        st.node_id, owner, "rpc_upload_part", begin,
+                        nbytes_out=256, nbytes_extra=ln,
+                        ino=ino, chunk_off=coff, length=ln,
                         upload_id=upload_id, part_no=part_no,
                         cos_bucket=m.cos_bucket, cos_key=m.cos_key,
                         file_size=m.size)
-                ends.append(te)
             except (SimTimeout, SimCrash, CosError):
-                ends.append(st.router.charge_timeout(t))
+                te = st.router.charge_timeout(begin)
                 ok = False
+            window.settle(te)
+            ends.append(te)
         t = max(ends) if ends else t
         if not ok:
-            t = st.cos.mpu_abort(upload_id, start=t)
+            t = self._abort_mpu(upload_id, t)
             st.bump("persist_abort")
             return {"outcome": "abort"}, t
         try:
             t = st.cos.mpu_commit(upload_id, start=t)
         except CosError:
-            t = st.cos.mpu_abort(upload_id, start=t)
+            t = self._abort_mpu(upload_id, t)
             return {"outcome": "abort"}, t
         st.crash_at("persist_after_mpu_commit")
         t = self.wal.log(Cmd.MPU_COMMITTED,
@@ -155,6 +164,28 @@ class Persister:
         t = st.cos.mpu_add(upload_id, part_no, data[:length], start=t)
         st.bump("mpu_part")
         return {"ok": True}, t
+
+    def _abort_mpu(self, upload_id: str, start: float) -> float:
+        """Abort an upload at COS and retire its pending record so replay
+        does not resurrect it as an orphan."""
+        st = self.state
+        t = st.cos.mpu_abort(upload_id, start=start)
+        return self.wal.log(Cmd.MPU_ABORTED, {"upload_id": upload_id}, t)
+
+    def recover_orphan_mpus(self, start: float) -> float:
+        """Abort every MPU whose begin was Raft-logged but that never reached
+        commit/abort — the Fig. 8 recovery consuming MPU_BEGIN_RECORDED.
+        Idempotent: COS abort of an unknown upload id is a no-op."""
+        st = self.state
+        t = start
+        for upload_id in sorted(st.mpu_pending):
+            try:
+                t = st.cos.mpu_abort(upload_id, start=t)
+            except CosError:
+                continue  # retried at the next recovery pass
+            t = self.wal.log(Cmd.MPU_ABORTED, {"upload_id": upload_id}, t)
+            st.bump("mpu_orphan_aborted")
+        return t
 
     def _delete_old_keys(self, m: InodeMeta, start: float) -> float:
         st = self.state

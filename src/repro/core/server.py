@@ -45,6 +45,20 @@ class ServerConfig:
     # paper §6.3: prefetch parallelism for COS range reads
     cos_part_parallel: int = 64
     rpc_timeout_s: float = 1.0
+    # ---- background write-back pipeline (§5.2, Figs. 12-14) --------------
+    # cluster-wide bound on concurrently in-flight coord_persist operations
+    flush_inflight: int = 16
+    # per-persist bound on concurrently in-flight MPU part uploads
+    persist_part_window: int = 16
+    # bound on concurrently in-flight migration sends during a ring change
+    migrate_inflight: int = 8
+    # dirty-page watermarks: above hi, foreground staged writes are stalled
+    # and the flusher switches to priority (largest/coldest-first) eviction;
+    # 0 disables backpressure entirely
+    dirty_hiwater_bytes: int = 256 << 20
+    dirty_lowater_bytes: int = 128 << 20
+    # base stall per staged write while above the high-watermark
+    backpressure_stall_s: float = 0.002
 
 
 @dataclass
@@ -85,7 +99,6 @@ class CacheServer:
         self.coord_unlink = self.coordinator.coord_unlink
         self.coord_rename = self.coordinator.coord_rename
         self.coord_truncate = self.coordinator.coord_truncate
-        self.recover_pending = self.coordinator.recover_pending
         self.coord_persist = self.persister.coord_persist
         self.rpc_upload_part = self.persister.rpc_upload_part
         self.rpc_clear_chunk_dirty = self.persister.rpc_clear_chunk_dirty
@@ -197,6 +210,14 @@ class CacheServer:
         self.state.clock.advance_to(end)
         return end
 
+    def recover_pending(self, start: float) -> float:
+        """Post-replay recovery: re-drive in-doubt 2PC decisions, then abort
+        any MPU this coordinator began but never committed (Fig. 8: the
+        MPU-begin key is logged first precisely so the orphan upload can be
+        aborted here)."""
+        t = self.coordinator.recover_pending(start)
+        return self.persister.recover_orphan_mpus(t)
+
     # =====================================================================
     # read-side RPCs (no transaction; §3.3 servers always see committed state)
     # =====================================================================
@@ -300,7 +321,13 @@ class CacheServer:
                        "length": len(data), "ref": ref.to_payload(),
                        "stage_id": stage_id}, t)
         st.bump("staged_bytes", len(data))
-        return {"ok": True}, t
+        # dirty-page backpressure (§5.2): above the high-watermark the reply
+        # carries a stall hint that the client honours before issuing more
+        # foreground writes, letting the background flusher catch up
+        bp = st.backpressure_delay()
+        if bp > 0.0:
+            st.bump("bp_stalls")
+        return {"ok": True, "bp_delay": bp}, t
 
     # =====================================================================
     # maintenance

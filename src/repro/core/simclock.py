@@ -75,6 +75,30 @@ class Resource:
         self.busy_time = 0.0
 
 
+class InflightWindow:
+    """Bounded-concurrency admission window over virtual time.
+
+    Models a client-side in-flight limit (outstanding RPCs, queued MPU part
+    uploads, migration sends) that is *narrower* than the underlying hardware
+    lanes: `admit(start)` returns the earliest time a new operation may begin
+    given at most ``slots`` operations in flight, and the caller reports the
+    operation's completion with ``settle(end)``.  Unlike `Resource`, the
+    window adds no latency or bandwidth cost of its own — it only bounds
+    overlap, so pipelined schedulers (persist parts, background flush,
+    migration sends) stay tunable without distorting the hardware model.
+    """
+
+    def __init__(self, slots: int) -> None:
+        self._slots = [0.0] * max(1, slots)
+        heapq.heapify(self._slots)
+
+    def admit(self, start: float) -> float:
+        return max(start, heapq.heappop(self._slots))
+
+    def settle(self, end: float) -> None:
+        heapq.heappush(self._slots, end)
+
+
 @dataclass
 class HardwareModel:
     """Cost-model constants.  Defaults approximate the paper's two testbeds

@@ -68,6 +68,10 @@ class ServerState:
         default_factory=dict)
     # in-doubt coordinator transactions found by replay (txseq -> info)
     coord_pending: dict[int, dict] = field(default_factory=dict)
+    # MPUs this coordinator began but has not committed/aborted yet
+    # (upload_id -> {ino, bucket, key}); rebuilt by replay so a restarted
+    # coordinator can abort the orphan uploads (Fig. 8 black dots)
+    mpu_pending: dict[str, dict] = field(default_factory=dict)
     # crash injection points (names match Fig. 8 black dots)
     crash_points: set[str] = field(default_factory=set)
     # stats for benchmarks (per-method RPC stats land here too)
@@ -86,6 +90,7 @@ class ServerState:
         self.ring = HashRing()
         self.ino_counter = 1
         self.coord_done, self.coord_pending = {}, {}
+        self.mpu_pending = {}
 
     def arm_crash(self, point: str) -> None:
         self.crash_points.add(point)
@@ -138,3 +143,25 @@ class ServerState:
 
     def bump(self, stat: str, n: float = 1) -> None:
         self.stats[stat] = self.stats.get(stat, 0) + n
+
+    # =====================================================================
+    # dirty-page accounting / backpressure (§5.2 write-back pipeline)
+    # =====================================================================
+    def dirty_bytes(self) -> int:
+        """Locally held bytes of dirty chunks on this node — the quantity
+        the flusher's watermarks govern."""
+        return sum(c.local_bytes() for c in self.chunks.chunks.values()
+                   if c.dirty)
+
+    def backpressure_delay(self) -> float:
+        """Stall to impose on a foreground staged write while dirty bytes
+        sit above the high-watermark.  Grows with the overflow so writers
+        cannot outrun the flusher indefinitely; 0 below the watermark."""
+        hi = self.cfg.dirty_hiwater_bytes
+        if hi <= 0:
+            return 0.0
+        db = self.dirty_bytes()
+        if db <= hi:
+            return 0.0
+        overflow = (db - hi) / max(1.0, hi - self.cfg.dirty_lowater_bytes)
+        return self.cfg.backpressure_stall_s * min(8.0, 1.0 + overflow)

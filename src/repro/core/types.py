@@ -60,6 +60,7 @@ class Cmd(enum.IntEnum):
     DIRTY_CLEARED_CHUNK = 33
     DIRTY_CLEARED_META = 34
     COS_DELETE_DONE = 35
+    MPU_ABORTED = 36          # upload aborted (runtime or orphan recovery)
     # cluster reconfiguration
     NODE_JOIN = 40
     NODE_LEAVE = 41

@@ -156,17 +156,45 @@ def decode_train(params: dict, cfg: ArchConfig, tokens: jax.Array,
     return rmsnorm(params["dec_norm"], x, cfg.norm_eps)
 
 
-def loss_fn(params: dict, cfg: ArchConfig, batch: dict) -> jax.Array:
-    enc_out = encode(params, cfg, batch["frontend"])
-    hidden = decode_train(params, cfg, batch["tokens"], enc_out)
+def _ce_terms(table: jax.Array, hidden: jax.Array, labels: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    """Masked cross-entropy pieces for one sequence chunk (f32 logits live
+    only within the chunk)."""
     logits = jnp.einsum("bsd,vd->bsv", hidden.astype(jnp.float32),
-                        params["embed"]["table"].astype(jnp.float32))
-    labels = batch["labels"]
+                        table.astype(jnp.float32))
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(
         logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
     mask = (labels >= 0).astype(jnp.float32)
-    return jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return jnp.sum((logz - gold) * mask), mask.sum()
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict,
+            loss_chunk: int = 512) -> jax.Array:
+    enc_out = encode(params, cfg, batch["frontend"])
+    hidden = decode_train(params, cfg, batch["tokens"], enc_out)
+    table = params["embed"]["table"]
+    labels = batch["labels"]
+    s = hidden.shape[1]
+    # cross entropy over SEQUENCE CHUNKS with rematerialized bodies, as in
+    # lm.loss_fn (§Perf#6): (B, S, V) f32 logits never exist at once
+    if s % loss_chunk or s <= loss_chunk:
+        nll, n = _ce_terms(table, hidden, labels)
+    else:
+        nc = s // loss_chunk
+        hc = hidden.reshape(hidden.shape[0], nc, loss_chunk, -1)
+        lc = labels.reshape(labels.shape[0], nc, loss_chunk)
+
+        def chunk_body(carry, inp):
+            h, l = inp
+            t_nll, t_n = _ce_terms(table, h, l)
+            return (carry[0] + t_nll, carry[1] + t_n), None
+
+        (nll, n), _ = jax.lax.scan(
+            jax.checkpoint(chunk_body),
+            (jnp.zeros((), jnp.float32),) * 2,
+            (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0)))
+    return nll / jnp.maximum(n, 1.0)
 
 
 def prefill_fn(params: dict, cfg: ArchConfig, batch: dict) -> jax.Array:
