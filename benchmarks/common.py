@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
+import tempfile
 
 import numpy as np
 
@@ -55,6 +57,80 @@ def save_report(name: str, payload: dict) -> str:
 
 def mbps(nbytes: int, seconds: float) -> float:
     return nbytes / max(seconds, 1e-9) / 1e6
+
+
+def pctl(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs, dtype=float), q)) if xs else 0.0
+
+
+def fastpath_off(cl: Cluster) -> None:
+    """Disable the metadata fast paths (PR 7) on a running cluster: no lease
+    grants and no same-destination RPC batching.  Both knobs are read at use
+    time, so flipping them on the shared ServerConfig is enough."""
+    cl.cfg.lease_ttl_s = 0.0
+    cl.cfg.batch_rpcs = False
+
+
+def fastpath_section(n_nodes: int = 4, n_dirs: int = 4,
+                     files_per_dir: int = 8, rounds: int = 3,
+                     migrate: bool = False) -> dict:
+    """Before/after probe for the metadata fast paths (leases + batching):
+    the same stat/listdir-heavy workload on a fresh cluster with the fast
+    paths off vs on.  Reports total RPC envelopes, envelopes spent in the
+    metadata loop, and metadata-op p50/p99 in virtual time; with
+    `migrate=True` also the envelope cost of one node join (meta handoffs
+    coalesce to O(destinations) envelopes when batching is on)."""
+    out: dict = {}
+    for mode in ("off", "on"):
+        wd = tempfile.mkdtemp(prefix=f"bench-fastpath-{mode}-")
+        cl = make_cluster(wd, n=n_nodes)
+        if mode == "off":
+            fastpath_off(cl)
+        fs = make_fs(cl)
+        for d in range(n_dirs):
+            fs.makedirs(f"/bench/d{d}")
+        for d in range(n_dirs):
+            for i in range(files_per_dir):
+                fs.write_file(f"/bench/d{d}/f{i}.bin", blob(4096, d * 64 + i))
+        loop_t0, loop_env = cl.clock.now, cl.router.rpc_count
+        lat: list[float] = []
+        for _ in range(rounds):
+            for d in range(n_dirs):
+                t0 = cl.clock.now
+                fs.listdir(f"/bench/d{d}")
+                lat.append(cl.clock.now - t0)
+                for i in range(files_per_dir):
+                    t0 = cl.clock.now
+                    fs.stat(f"/bench/d{d}/f{i}.bin")
+                    lat.append(cl.clock.now - t0)
+        cell = {
+            "rpc_envelopes_total": cl.router.rpc_count,
+            "rpc_envelopes_meta_loop": cl.router.rpc_count - loop_env,
+            "meta_loop_s": round(cl.clock.now - loop_t0, 6),
+            "meta_ops": len(lat),
+            "meta_p50_ms": round(pctl(lat, 50) * 1e3, 6),
+            "meta_p99_ms": round(pctl(lat, 99) * 1e3, 6),
+            "batched_subcalls": cl.router.batched_subcalls,
+            "lease_hits": sum(fs.client.stats.get(k, 0) for k in
+                              ("lease_attr_hits", "lease_lookup_hits",
+                               "lease_readdir_hits")),
+        }
+        if migrate:
+            env0 = cl.router.rpc_count
+            t0 = cl.clock.now
+            cl.add_node()
+            cell["join_envelopes"] = cl.router.rpc_count - env0
+            cell["join_s"] = round(cl.clock.now - t0, 6)
+        out[mode] = cell
+        cl.close()
+        shutil.rmtree(wd, ignore_errors=True)
+    off, on = out["off"], out["on"]
+    out["rpc_reduction_pct"] = round(100 * (1 - on["rpc_envelopes_total"] /
+                                            max(off["rpc_envelopes_total"],
+                                                1)), 1)
+    out["meta_p99_reduction_pct"] = round(
+        100 * (1 - on["meta_p99_ms"] / max(off["meta_p99_ms"], 1e-9)), 1)
+    return out
 
 
 def rpc_summary(cl: Cluster, top: int = 8) -> dict:

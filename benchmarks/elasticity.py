@@ -13,7 +13,8 @@ import tempfile
 
 import numpy as np
 
-from .common import blob, make_cluster, make_fs, rpc_summary, save_report
+from .common import blob, fastpath_section, make_cluster, make_fs, \
+    rpc_summary, save_report
 
 N_NODES = 12
 N_FILES = 128
@@ -112,6 +113,9 @@ def run(quiet: bool = False) -> dict:
 
     # ---- before/after: serial vs pipelined drain of 1024 dirty files ------
     _drain_1024(rep, quiet)
+    # ---- before/after: metadata fast paths (leases + batching), with one
+    # node join so the migration meta-handoff coalescing is visible ---------
+    rep["fastpath"] = fastpath_section(n_nodes=6, n_dirs=8, migrate=True)
     save_report("fig13_14_elasticity", rep)
     if not quiet:
         print(f"[fig13] up-dirty   "

@@ -11,8 +11,8 @@ import tempfile
 
 from repro.baselines import S3FSConfig, S3FSLike
 
-from .common import CHUNK, FILE_MB, blob, make_cluster, make_fs, mbps, \
-    rpc_summary, save_report
+from .common import CHUNK, FILE_MB, blob, fastpath_section, make_cluster, \
+    make_fs, mbps, rpc_summary, save_report
 
 BLOCK = 128 * 1024
 
@@ -75,6 +75,9 @@ def run(quiet: bool = False) -> dict:
         rep["miss_vs_s3fs_pct"] = 100 * (
             rep["objcache_miss_mbps"] / rep["s3fs_cold_mbps"] - 1)
         rep["rpc_methods"] = rpc_summary(cl)
+        # before/after the PR 7 metadata fast paths (leases + batching) on
+        # the metadata side traffic of the same cluster shape
+        rep["fastpath"] = fastpath_section(n_nodes=4)
         save_report("fig9_fio_seqread", rep)
         if not quiet:
             busiest = next(iter(rep["rpc_methods"]), None)

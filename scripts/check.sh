@@ -15,3 +15,8 @@ echo "== flush-bench smoke =="
 # drains 256 dirty files through the background flusher and fails on a
 # >20% virtual-time regression vs reports/bench/flush_smoke_baseline.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.flush_smoke --check
+
+echo "== rpc-count smoke =="
+# fixed metadata+data workload; fails if RPC envelopes or typed sub-calls
+# grow >20% vs reports/bench/rpc_smoke_baseline.json (metadata fast paths)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.rpc_smoke --check

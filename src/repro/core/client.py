@@ -29,8 +29,8 @@ from dataclasses import dataclass, field
 from .hashring import HashRing
 from .net import Router, SimCrash, SimTimeout
 from .simclock import SimClock
-from .types import (Errno, FSError, InodeKind, ROOT_INODE, chunk_key,
-                    meta_key)
+from .types import (Errno, FSError, InodeKind, ROOT_INODE, StaleLeaseError,
+                    chunk_key, meta_key)
 
 _client_ids = itertools.count(1)
 
@@ -43,6 +43,12 @@ class ClientConfig:
     write_buffer_bytes: int = 128 * 1024   # §6.2: Linux allowed up to 128 KB
     readahead_chunks: int = 4          # chunks prefetched ahead on seq reads
     max_retries: int = 4
+    # deterministic bounded exponential backoff on ECONFLICT retries
+    # (base * 2^attempt, capped); a "queued" verdict means this TxId kept
+    # its place in the owner's wait-die queue, so it comes back after just
+    # the base delay to claim the lock hand-off reservation
+    backoff_base_s: float = 0.0005
+    backoff_cap_s: float = 0.016
 
 
 @dataclass
@@ -88,6 +94,11 @@ class ObjcacheClient:
         self._dentries: dict[tuple[int, str], int] = {}
         # attr cache (weak mode, validated at open): ino -> meta payload
         self._attrs: dict[int, dict] = {}
+        # client leases (weak mode): ino -> {epoch, expires, owner, attrs,
+        # children, loaded}.  A live lease answers repeat lookups/readdirs/
+        # getattrs locally with zero RPCs; renewals carry the epoch so any
+        # committed mutation at the owner invalidates the lease (ESTALE)
+        self._leases: dict[int, dict] = {}
         self.stats: dict[str, int] = {}
         self._pull_node_list()
 
@@ -124,7 +135,7 @@ class ObjcacheClient:
         """RPC with ESTALE pull-and-retry and timeout retries (same TxId).
         Payload sizes default to the handler's declared RpcSpec."""
         last: Exception | None = None
-        for _ in range(self.cfg.max_retries):
+        for attempt in range(self.cfg.max_retries):
             try:
                 res, t = self.router.rpc(
                     self.local_node, dst, method, self.clock.now,
@@ -132,6 +143,16 @@ class ObjcacheClient:
                     embedded_local=self._is_embedded(dst), **kw)
                 self.clock.advance_to(t)
                 return res
+            except StaleLeaseError as e:
+                # a mutation committed since our grant: drop the cached copy
+                # and re-fetch without the epoch (no node-list pull needed —
+                # the owner is alive and correct, only our lease is stale)
+                self._lease_drop(e.ino)
+                if "lease_epoch" in kw:
+                    kw["lease_epoch"] = None
+                self._bump("lease_stale")
+                last = e
+                continue
             except FSError as e:
                 if e.errno == Errno.ESTALE:
                     self._pull_node_list()
@@ -141,8 +162,11 @@ class ObjcacheClient:
                     last = e
                     continue
                 if e.errno == Errno.ECONFLICT:
-                    # racy lock conflict: back off and retry, same TxId
-                    self.clock.sleep(0.001)
+                    # racy lock conflict: bounded exponential backoff, then
+                    # retry with the same TxId (dedup keeps it idempotent)
+                    self._bump("conflict_retries")
+                    self.clock.sleep(
+                        self._backoff(attempt, getattr(e, "why", None)))
                     last = e
                     continue
                 raise
@@ -164,6 +188,63 @@ class ObjcacheClient:
         if dst in self.ring.nodes():
             return dst
         return self.ring.nodes()[0]
+
+    def _backoff(self, attempt: int, why: str | None = None) -> float:
+        if why == "queued":
+            # we kept our place in the wait-die queue: the released lock is
+            # reserved for this TxId, so come back after just the base delay
+            return self.cfg.backoff_base_s
+        return min(self.cfg.backoff_cap_s,
+                   self.cfg.backoff_base_s * (2 ** attempt))
+
+    # =====================================================================
+    # client leases (metadata fast path; weak mode only)
+    # =====================================================================
+    def _lease_for(self, ino: int) -> dict | None:
+        """The live lease on `ino`, or None.  A lease stops serving at its
+        TTL expiry but the entry (and its epoch) is kept so the next fetch
+        is a *renewal* the owner can validate; an ownership change drops the
+        entry outright (epochs on different owners are not comparable)."""
+        ent = self._leases.get(ino)
+        if ent is None:
+            return None
+        if ent["owner"] != self.ring.node_for(meta_key(ino)):
+            del self._leases[ino]
+            return None
+        if self.clock.now >= ent["expires"]:
+            return None
+        return ent
+
+    def _lease_drop(self, ino: int) -> None:
+        self._leases.pop(ino, None)
+
+    def _lease_absorb(self, ino: int, grant: dict | None, *,
+                      attrs: dict | None = None,
+                      children: dict | None = None,
+                      loaded: bool | None = None) -> None:
+        """Record a lease grant from a reply (plus whatever cacheable content
+        the reply carried).  A grant with a different epoch or owner starts a
+        fresh entry — content cached under the old epoch is discarded."""
+        if grant is None or self.cfg.consistency != "weak":
+            return
+        owner = self.ring.node_for(meta_key(ino))
+        ent = self._leases.get(ino)
+        if ent is None or ent["epoch"] != grant["epoch"] \
+                or ent["owner"] != owner:
+            ent = {"epoch": grant["epoch"], "owner": owner, "attrs": None,
+                   "children": None, "loaded": None}
+            self._leases[ino] = ent
+        ent["expires"] = self.clock.now + grant["ttl"]
+        if attrs is not None:
+            ent["attrs"] = attrs
+        if children is not None:
+            ent["children"] = children
+        if loaded is not None:
+            ent["loaded"] = loaded
+
+    def _lease_epoch_kw(self, ino: int) -> int | None:
+        ent = self._leases.get(ino)
+        return ent["epoch"] if ent is not None else None
 
     # =====================================================================
     # page cache (weak mode node-local tier)
@@ -200,30 +281,56 @@ class ObjcacheClient:
             d, _, _ = self._pages.pop(key)
             self._pages_bytes -= len(d)
         self._attrs.pop(ino, None)
+        self._lease_drop(ino)
 
     # =====================================================================
     # namespace operations
     # =====================================================================
     def getattr(self, ino: int, *, cached_ok: bool = False) -> dict:
-        if cached_ok and self.cfg.consistency == "weak" and ino in self._attrs:
-            self._bump("attr_hits")
-            return self._attrs[ino]
+        weak = self.cfg.consistency == "weak"
+        if cached_ok and weak:
+            lease = self._lease_for(ino)
+            if lease is not None and lease["attrs"] is not None:
+                self._bump("lease_attr_hits")
+                return lease["attrs"]
+            if ino in self._attrs:
+                self._bump("attr_hits")
+                return self._attrs[ino]
         owner = self.ring.node_for(meta_key(ino))
+        # carry the lease epoch as a renewal: an unchanged epoch confirms our
+        # cached pages for this inode; a bumped one raises StaleLeaseError
+        # and _rpc re-fetches fresh (close-to-open preserved at open())
         res = self._rpc(owner, "rpc_getattr", ino=ino,
-                        nl_version=self.nl_version)
-        if self.cfg.consistency == "weak":
+                        nl_version=self.nl_version,
+                        lease_epoch=self._lease_epoch_kw(ino) if weak
+                        else None)
+        grant = res.pop("lease", None)
+        self._lease_absorb(ino, grant, attrs=res)
+        if weak:
             self._attrs[ino] = res
         return res
 
     def lookup(self, parent: int, name: str) -> int:
-        if self.cfg.consistency == "weak":
+        weak = self.cfg.consistency == "weak"
+        if weak:
+            lease = self._lease_for(parent)
+            if lease is not None and lease["children"] is not None \
+                    and lease["loaded"]:
+                # zero-RPC fast path: the leased children map answers both
+                # positive and negative lookups until the lease dies
+                self._bump("lease_lookup_hits")
+                child = lease["children"].get(name)
+                if child is None:
+                    raise FSError(Errno.ENOENT, f"{parent}/{name}")
+                return child
             hit = self._dentries.get((parent, name))
             if hit is not None:
                 return hit
         owner = self.ring.node_for(meta_key(parent))
+        lease_kw = self._lease_epoch_kw(parent) if weak else None
         try:
             res = self._rpc(owner, "rpc_lookup", parent=parent, name=name,
-                            nl_version=self.nl_version)
+                            nl_version=self.nl_version, lease_epoch=lease_kw)
         except FSError as e:
             if e.errno != Errno.ENOENT:
                 raise
@@ -232,30 +339,62 @@ class ObjcacheClient:
             if not loaded:
                 raise
             res = self._rpc(owner, "rpc_lookup", parent=parent, name=name,
-                            nl_version=self.nl_version)
+                            nl_version=self.nl_version,
+                            lease_epoch=self._lease_epoch_kw(parent) if weak
+                            else None)
         ino = res["ino"]
-        if self.cfg.consistency == "weak":
+        self._lease_absorb(parent, res.get("lease"))
+        if weak:
             self._dentries[(parent, name)] = ino
         return ino
 
     def _ensure_dir_loaded(self, ino: int) -> bool:
         """Returns True if a COS listing was (or had been) applied."""
+        weak = self.cfg.consistency == "weak"
+        if weak:
+            lease = self._lease_for(ino)
+            if lease is not None and lease["loaded"]:
+                return True     # zero-RPC: leased dir is known loaded
         owner = self.ring.node_for(meta_key(ino))
         res = self._rpc(owner, "rpc_readdir", ino=ino,
-                        nl_version=self.nl_version)
+                        nl_version=self.nl_version,
+                        lease_epoch=self._lease_epoch_kw(ino) if weak
+                        else None)
+        self._lease_absorb(ino, res.get("lease"),
+                           children=res["children"], loaded=res["loaded"])
         if res["loaded"]:
             return True
         self._rpc(owner, "coord_load_dir", ino=ino,
                   client_id=self.client_id, seq=self.next_seq(),
                   nl_version=self.nl_version)
+        # the load mutated the dir (children set, epoch bumped): our lease
+        # content is stale by construction, refetch on next use
+        self._lease_drop(ino)
         self._bump("dir_loads")
         return True
 
     def readdir(self, ino: int) -> dict[str, int]:
+        weak = self.cfg.consistency == "weak"
+        if weak:
+            lease = self._lease_for(ino)
+            if lease is not None and lease["children"] is not None \
+                    and lease["loaded"]:
+                self._bump("lease_readdir_hits")
+                return dict(lease["children"])
         self._ensure_dir_loaded(ino)
+        lease = self._lease_for(ino) if weak else None
+        if lease is not None and lease["children"] is not None \
+                and lease["loaded"]:
+            # _ensure_dir_loaded just refreshed the lease: no second RPC
+            self._bump("lease_readdir_hits")
+            return dict(lease["children"])
         owner = self.ring.node_for(meta_key(ino))
         res = self._rpc(owner, "rpc_readdir", ino=ino,
-                        nl_version=self.nl_version)
+                        nl_version=self.nl_version,
+                        lease_epoch=self._lease_epoch_kw(ino) if weak
+                        else None)
+        self._lease_absorb(ino, res.get("lease"),
+                           children=res["children"], loaded=res["loaded"])
         return res["children"]
 
     def create(self, parent: int, name: str, kind: InodeKind,
@@ -266,6 +405,7 @@ class ObjcacheClient:
                         kind=int(kind), cos_bucket=cos_bucket,
                         cos_key=cos_key, mtime=self.clock.now,
                         nl_version=self.nl_version)
+        self._lease_drop(parent)   # our own mutation bumped the epoch
         if self.cfg.consistency == "weak":
             self._dentries[(parent, name)] = res["ino"]
         return res["ino"]
@@ -276,6 +416,7 @@ class ObjcacheClient:
                   seq=self.next_seq(), parent=parent, name=name, ino=ino,
                   nl_version=self.nl_version)
         self._dentries.pop((parent, name), None)
+        self._lease_drop(parent)
         self.invalidate_ino(ino)
 
     def rename(self, src_parent: int, src_name: str, dst_parent: int,
@@ -287,6 +428,9 @@ class ObjcacheClient:
                   dst_name=dst_name, ino=ino, new_cos_key=new_cos_key,
                   nl_version=self.nl_version)
         self._dentries.pop((src_parent, src_name), None)
+        self._lease_drop(src_parent)
+        self._lease_drop(dst_parent)
+        self._lease_drop(ino)
         if self.cfg.consistency == "weak":
             self._dentries[(dst_parent, dst_name)] = ino
         self._attrs.pop(ino, None)
@@ -323,7 +467,10 @@ class ObjcacheClient:
                 if e.errno not in (Errno.ESTALE, Errno.ECONFLICT) or \
                         attempt == self.cfg.max_retries - 1:
                     raise
-                self.clock.sleep(0.001)
+                if e.errno == Errno.ECONFLICT:
+                    self._bump("conflict_retries")
+                self.clock.sleep(self._backoff(attempt,
+                                               getattr(e, "why", None)))
                 self._pull_node_list()
             except (SimTimeout, SimCrash):
                 # stale ring naming a departed/dead owner: same recovery as
@@ -379,6 +526,7 @@ class ObjcacheClient:
         self._rpc(owner, "coord_flush_write", client_id=self.client_id,
                   seq=seq, ino=ino, staged=staged, new_size=new_size,
                   mtime=self.clock.now, nl_version=self.nl_version)
+        self._lease_drop(ino)   # our own commit bumped the epoch
         if self.cfg.consistency == "weak" and ino in self._attrs:
             self._attrs[ino]["size"] = new_size
 

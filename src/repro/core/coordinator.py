@@ -21,6 +21,15 @@ from .types import (Cmd, Errno, FSError, InodeKind, InodeMeta, TxId,
                     chunk_key, meta_key)
 
 
+def _abort_error(what: str, res: dict) -> FSError:
+    """ECONFLICT carrying the wait-die verdict ("queued" keeps its place in
+    line; the client's backoff reads it to retry sooner)."""
+    e = FSError(Errno.ECONFLICT,
+                f"{what} aborted ({res.get('why', 'conflict')})")
+    e.why = res.get("why")
+    return e
+
+
 class Coordinator:
     def __init__(self, state: ServerState, wal: Participant) -> None:
         self.state = state
@@ -29,25 +38,52 @@ class Coordinator:
     # =====================================================================
     # generic 2PC drive
     # =====================================================================
+    def _dispatch_2pc(self, node: str, method: str, start: float,
+                      nbytes_out: int | None = None, **kw
+                      ) -> tuple[dict, float]:
+        """One 2PC message.  The coordinator's own participant runs in the
+        same process, so messages to self dispatch in-process — no loopback
+        envelope, no NIC time — which alone removes two wire messages from
+        every transaction whose coordinator is also a participant (it almost
+        always is: the coordinator owns the primary metadata key)."""
+        st = self.state
+        if node == st.node_id:
+            st.bump("tx_self_dispatch")
+            return getattr(self.wal, method)(start, **kw)
+        return st.router.rpc(st.node_id, node, method, start,
+                             nbytes_out=nbytes_out, **kw)
+
     def coord_execute(self, start: float, client_id: int, seq: int,
                       plan: dict[str, dict]) -> tuple[dict, float]:
         st = self.state
         st.check_alive()
         done = st.coord_done.get((client_id, seq))
-        if done is not None:
+        if done is not None and done[1] == "commit":
+            # duplicated request (§4.5): replay the committed outcome.  An
+            # *aborted* (client_id, seq) falls through and re-executes with a
+            # fresh txseq — the retry of a conflicted operation must be able
+            # to claim the wait-die reservation its earlier attempt earned.
             return {"outcome": done[1], "dup": True}, start
         # single-node fast path: everything on this server -> one log append
         if set(plan) == {st.node_id}:
             ent = plan[st.node_id]
             txid = TxId(client_id, seq, 0)
-            if not st.locks.try_acquire(list(ent["keys"]), txid):
-                raise FSError(Errno.ECONFLICT, "local lock conflict")
+            verdict = st.locks.acquire(
+                list(ent["keys"]), txid, now=start,
+                wait_die=st.cfg.lock_mode == "waitdie")
+            if verdict != "granted":
+                st.bump("lock_conflict")
+                st.bump(f"lock_{verdict}")
+                e = FSError(Errno.ECONFLICT,
+                            f"local lock conflict ({verdict})")
+                e.why = verdict
+                raise e
             try:
                 st.check_writable()
                 t = self.wal.log(Cmd.LOCAL_META_UPDATE,
                                  {"ops": ent["ops"]}, start)
             finally:
-                st.locks.release(txid)
+                st.locks.release(txid, now=start)
             st.bump("tx_local")
             return {"outcome": "commit"}, t
 
@@ -56,18 +92,19 @@ class Coordinator:
         t = self.wal.log(Cmd.TX_COORD_BEGIN,
                          {"txid": txid_p, "nodes": sorted(plan)}, start)
         st.crash_at("coord_after_begin")
-        votes_ok, ends = True, []
+        votes_ok, ends, why = True, [], None
         for node in sorted(plan):
             ent = plan[node]
             try:
-                res, te = st.router.rpc(
-                    st.node_id, node, "rpc_prepare", t,
+                res, te = self._dispatch_2pc(
+                    node, "rpc_prepare", t,
                     nbytes_out=sum(len(str(o)) for o in ent["ops"]) + 128,
                     txid_p=txid_p, cmd_id=int(ent["cmd"]), ops=ent["ops"],
                     keys=ent["keys"], nl_version=None)
                 ends.append(te)
                 if not res["vote"]:
                     votes_ok = False
+                    why = why or res.get("why")
             except (SimTimeout, SimCrash):
                 ends.append(st.router.charge_timeout(t))
                 votes_ok = False
@@ -80,7 +117,10 @@ class Coordinator:
         t = self.send_decision(txid, sorted(plan), commit=votes_ok, start=t)
         st.coord_pending.pop(txid.txseq, None)
         st.bump("tx_commit" if votes_ok else "tx_abort")
-        return {"outcome": "commit" if votes_ok else "abort"}, t
+        out = {"outcome": "commit" if votes_ok else "abort"}
+        if why is not None:
+            out["why"] = why    # wait-die verdict, surfaced to client backoff
+        return out, t
 
     def send_decision(self, txid: TxId, nodes: list[str], commit: bool,
                       start: float) -> float:
@@ -90,8 +130,7 @@ class Coordinator:
         ends = []
         for node in nodes:
             try:
-                _, te = st.router.rpc(st.node_id, node, method, start,
-                                      txid_p=txid_p)
+                _, te = self._dispatch_2pc(node, method, start, txid_p=txid_p)
                 ends.append(te)
             except (SimTimeout, SimCrash):
                 # participant will learn the outcome on recovery / retry
@@ -99,18 +138,43 @@ class Coordinator:
         return max(ends) if ends else start
 
     def recover_pending(self, start: float) -> float:
-        """Re-drive in-doubt coordinator transactions after replay (§4.4)."""
+        """Re-drive in-doubt coordinator transactions after replay (§4.4).
+        Decisions for different transactions bound for the same participant
+        coalesce into one batched envelope per node."""
         st = self.state
         t = start
+        by_node: dict[str, list[dict]] = {}
+        local: list[tuple[str, dict]] = []
         for txseq, info in sorted(st.coord_pending.items()):
             txid = txid_from_payload(info["txid"])
-            nodes = list(info["nodes"])
-            if info["decided"] == "commit":
-                t = self.send_decision(txid, nodes, commit=True, start=t)
-            else:  # undecided or decided-abort: abort is always safe pre-commit
-                t = self.send_decision(txid, nodes, commit=False, start=t)
+            # undecided or decided-abort: abort is always safe pre-commit
+            method = "rpc_commit" if info["decided"] == "commit" \
+                else "rpc_abort"
+            for node in info["nodes"]:
+                call = {"method": method,
+                        "kwargs": {"txid_p": txid_payload(txid)}}
+                if node == st.node_id:
+                    local.append((method, call["kwargs"]))
+                else:
+                    by_node.setdefault(node, []).append(call)
+        ends = [t]
+        for method, kw in local:
+            _, te = getattr(self.wal, method)(t, **kw)
+            ends.append(te)
+        for node, calls in sorted(by_node.items()):
+            try:
+                if st.cfg.batch_rpcs:
+                    _, te = st.router.rpc_batch(st.node_id, node, calls, t)
+                    ends.append(te)
+                else:
+                    for c in calls:
+                        _, te = st.router.rpc(st.node_id, node, c["method"],
+                                              t, **c["kwargs"])
+                        ends.append(te)
+            except (SimTimeout, SimCrash):
+                ends.append(st.router.charge_timeout(t))
         st.coord_pending.clear()
-        return t
+        return max(ends)
 
     # =====================================================================
     # plan building helpers
@@ -163,7 +227,7 @@ class Coordinator:
                        [meta_key(parent)], Cmd.TX_PREPARE_DIR)
         res, t = self.coord_execute(start, client_id, seq, plan)
         if res["outcome"] != "commit":
-            raise FSError(Errno.ECONFLICT, "create aborted")
+            raise _abort_error("create", res)
         return {"ino": ino}, t
 
     @rpc_handler()
@@ -217,7 +281,7 @@ class Coordinator:
                        [meta_key(ino)], Cmd.TX_PREPARE_DIR)
         res, t = self.coord_execute(t, client_id, seq, plan)
         if res["outcome"] != "commit":
-            raise FSError(Errno.ECONFLICT, "load_dir aborted")
+            raise _abort_error("load_dir", res)
         d = st.metas.get(ino)
         st.bump("dir_loads")
         return {"children": dict(d.children) if d else {}}, t
@@ -248,7 +312,7 @@ class Coordinator:
                        [meta_key(ino)])
         res, t = self.coord_execute(start, client_id, seq, plan)
         if res["outcome"] != "commit":
-            raise FSError(Errno.ECONFLICT, "flush aborted")
+            raise _abort_error("flush", res)
         return {"size": new_size}, t
 
     @rpc_handler()
@@ -281,7 +345,7 @@ class Coordinator:
                        [meta_key(parent)], Cmd.TX_PREPARE_DIR)
         res, t = self.coord_execute(start, client_id, seq, plan)
         if res["outcome"] != "commit":
-            raise FSError(Errno.ECONFLICT, "unlink aborted")
+            raise _abort_error("unlink", res)
         return {"ok": True}, t
 
     @rpc_handler()
@@ -316,7 +380,7 @@ class Coordinator:
                        [meta_key(dst_parent)], Cmd.TX_PREPARE_DIR)
         res, t = self.coord_execute(start, client_id, seq, plan)
         if res["outcome"] != "commit":
-            raise FSError(Errno.ECONFLICT, "rename aborted")
+            raise _abort_error("rename", res)
         return {"ok": True}, t
 
     @rpc_handler()
@@ -351,5 +415,5 @@ class Coordinator:
                                [chunk_key(ino, coff)], Cmd.TX_PREPARE_CHUNK)
         res, t = self.coord_execute(start, client_id, seq, plan)
         if res["outcome"] != "commit":
-            raise FSError(Errno.ECONFLICT, "truncate aborted")
+            raise _abort_error("truncate", res)
         return {"ok": True}, t

@@ -88,20 +88,41 @@ class Migrator:
             chunks_by_dst.setdefault(dst, []).append(key)
 
         for dst in sorted(metas_by_dst):
+            # metadata handoffs are small control records: all of one
+            # receiver's metas/dirs coalesce into a single batched envelope
+            # (O(destinations) messages), falling back to one RPC each when
+            # batching is disabled
+            calls, kinds = [], []
             for ino in metas_by_dst[dst]:
                 m = st.metas.get(ino)
                 if m is None:
                     continue
                 is_dir = m.kind == InodeKind.DIR
+                calls.append({"method": "rpc_migrate_recv_meta",
+                              "kwargs": {"meta": m.to_payload(),
+                                         "is_dir": is_dir},
+                              "nbytes_out": len(str(m.to_payload())) + 64})
+                kinds.append((ino, is_dir))
+            if not calls:
+                continue
+            if st.cfg.batch_rpcs:
                 begin = window.admit(start)
-                _, te = st.router.rpc(
-                    st.node_id, dst, "rpc_migrate_recv_meta", begin,
-                    nbytes_out=len(str(m.to_payload())) + 64,
-                    meta=m.to_payload(), is_dir=is_dir)
-                te = self.wal.log(Cmd.EVICT_META, {"ino": ino}, te)
+                _, te = st.router.rpc_batch(st.node_id, dst, calls, begin)
+                for ino, is_dir in kinds:
+                    te = self.wal.log(Cmd.EVICT_META, {"ino": ino}, te)
+                    moved["dirs" if is_dir else "metas"] += 1
                 window.settle(te)
                 ends.append(te)
-                moved["dirs" if is_dir else "metas"] += 1
+            else:
+                for call, (ino, is_dir) in zip(calls, kinds):
+                    begin = window.admit(start)
+                    _, te = st.router.rpc(
+                        st.node_id, dst, call["method"], begin,
+                        nbytes_out=call["nbytes_out"], **call["kwargs"])
+                    te = self.wal.log(Cmd.EVICT_META, {"ino": ino}, te)
+                    window.settle(te)
+                    ends.append(te)
+                    moved["dirs" if is_dir else "metas"] += 1
         for dst in sorted(chunks_by_dst):
             for ino, coff in chunks_by_dst[dst]:
                 c = st.chunks.get(ino, coff)

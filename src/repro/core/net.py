@@ -23,6 +23,7 @@ from dataclasses import dataclass
 from typing import TYPE_CHECKING, Any, Callable
 
 from .simclock import HardwareModel, SimClock
+from .types import FSError
 
 if TYPE_CHECKING:  # pragma: no cover
     from .server import CacheServer
@@ -93,8 +94,10 @@ class Router:
         self.handlers: dict[str, dict[str, tuple[Callable, RpcSpec]]] = {}
         self.partitioned: set[str] = set()
         # stats
-        self.rpc_count = 0
+        self.rpc_count = 0          # wire envelopes (a batch counts once)
         self.rpc_bytes = 0
+        self.batch_envelopes = 0    # envelopes that carried > 1 sub-call
+        self.batched_subcalls = 0   # sub-calls delivered inside batches
         # per-method: calls / bytes / vtime (summed reply latency) /
         # timeouts (unreachable dst) / errors (handler raised)
         self.method_stats: dict[str, dict[str, float]] = {}
@@ -203,6 +206,83 @@ class Router:
         sstats[k_bytes] = sstats.get(k_bytes, 0) + n_total
         sstats[k_vtime] = sstats.get(k_vtime, 0.0) + latency
         return result, back
+
+    def rpc_batch(self, src: str | None, dst: str, calls: list[dict],
+                  start: float, embedded_local: bool = False
+                  ) -> tuple[list[tuple[str, Any, float]], float]:
+        """Same-destination coalescing: one wire envelope carrying N typed
+        sub-calls.  Each element of `calls` is
+        ``{"method": str, "kwargs": dict, "nbytes_out"?, "nbytes_in"?,
+        "nbytes_extra"?}``.
+
+        All sub-calls dispatch at the envelope's arrival time (server-side
+        fan-out; shared hardware resources still serialize in virtual time
+        through their lanes) and the reply lands after the *latest* sub-call
+        completes.  Returns ``([("ok", result, end) | ("err", exc, end)],
+        reply_time)`` — an `FSError` in one sub-call is reported in its slot
+        without failing the others, exactly like N independent RPCs would
+        behave.  Accounting: one envelope in `rpc_count`, but per-method
+        calls/bytes/vtime are still credited per sub-call so `rpc_stats()`
+        keeps full method visibility (plus a per-method `batched` counter)."""
+        node_handlers = self.handlers.get(dst)
+        if node_handlers is not None:
+            for c in calls:
+                if c["method"] not in node_handlers:
+                    raise UnknownRpcError(
+                        f"no RPC handler {c['method']!r} registered on {dst}; "
+                        f"known: {self.registered_methods(dst)}")
+        if not self.reachable(dst):
+            for c in calls:
+                self._mstat(c["method"])["timeouts"] += 1
+            raise SimTimeout(f"rpc_batch x{len(calls)} to {dst}: timeout "
+                             f"(+{self.timeout_s}s at t={start:.6f})")
+        sized = []
+        for c in calls:
+            fn, spec = node_handlers[c["method"]]
+            n_out = c.get("nbytes_out")
+            n_in = c.get("nbytes_in")
+            sized.append((c, fn,
+                          spec.request_bytes if n_out is None else n_out,
+                          spec.reply_bytes if n_in is None else n_in))
+        # one envelope: summed payloads + a small per-sub-call frame header
+        total_out = sum(n for _, _, n, _ in sized) + 16 * len(sized)
+        total_in = sum(n for _, _, _, n in sized) + 16 * len(sized)
+        arrive = self.xfer(src, dst, total_out, start, embedded_local)
+        server = self.servers[dst]
+        results: list[tuple[str, Any, float]] = []
+        ends = [arrive]
+        for c, fn, n_out, n_in in sized:
+            try:
+                result, end = fn(start=arrive, **c["kwargs"])
+                results.append(("ok", result, end))
+                ends.append(end)
+            except FSError as e:
+                self._mstat(c["method"])["errors"] += 1
+                results.append(("err", e, arrive))
+        back = self.xfer(dst, src, total_in, max(ends), embedded_local) \
+            if src is not None else self.xfer(dst, dst, total_in, max(ends),
+                                              True)
+        latency = back - start
+        self.rpc_count += 1
+        if len(calls) > 1:
+            self.batch_envelopes += 1
+            self.batched_subcalls += len(calls)
+        sstats = server.stats
+        for (c, fn, n_out, n_in), (status, _r, _e) in zip(sized, results):
+            if status != "ok":
+                continue
+            n_total = n_out + n_in + max(0, c.get("nbytes_extra", 0))
+            self.rpc_bytes += n_total
+            mstat = self._mstat(c["method"])
+            mstat["calls"] += 1
+            mstat["bytes"] += n_total
+            mstat["vtime"] += latency
+            mstat["batched"] = mstat.get("batched", 0) + (len(calls) > 1)
+            k_calls, k_bytes, k_vtime = self._stat_keys(c["method"])
+            sstats[k_calls] = sstats.get(k_calls, 0) + 1
+            sstats[k_bytes] = sstats.get(k_bytes, 0) + n_total
+            sstats[k_vtime] = sstats.get(k_vtime, 0.0) + latency
+        return results, back
 
     def charge_timeout(self, start: float) -> float:
         return start + self.timeout_s

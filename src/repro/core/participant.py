@@ -59,12 +59,12 @@ class Participant:
             if tx is not None:
                 for op in tx.ops:
                     self.apply_op(op.payload)
-            st.locks.release(txid)
+            st.locks.release(txid, now=st.clock.now)
             st.txs.record_completed(txid, "commit")
         elif cmd == Cmd.TX_ABORT:
             txid = txid_from_payload(p["txid"])
             st.txs.pop_prepared(txid)
-            st.locks.release(txid)
+            st.locks.release(txid, now=st.clock.now)
             st.txs.record_completed(txid, "abort")
         elif cmd in (Cmd.LOCAL_META_UPDATE, Cmd.LOCAL_CHUNK_COMMIT,
                      Cmd.LOCAL_DIR_UPDATE):
@@ -81,12 +81,17 @@ class Participant:
                                          BulkRef.from_payload(p["ref"])))
         elif cmd in (Cmd.EVICT_META,):
             st.metas.evict(p["ino"])
+            st.bump_lease(p["ino"])
         elif cmd in (Cmd.EVICT_CHUNK,):
             st.chunks.evict(p["ino"], p["chunk_off"])
         elif cmd == Cmd.MIGRATE_RECV_META or cmd == Cmd.MIGRATE_RECV_DIR:
+            # migration handoff invalidates leases the old owner granted:
+            # the receiver starts a fresh epoch strictly above anything a
+            # client could still hold for this inode
             meta = InodeMeta.from_payload(p["meta"])
             st.metas.put(meta)
             st.note_ino(meta.ino)
+            st.bump_lease(meta.ino)
         elif cmd == Cmd.MIGRATE_RECV_CHUNK:
             c = ChunkState.from_payload(p["chunk"])
             st.chunks.chunks[(c.ino, c.chunk_off)] = c
@@ -130,9 +135,16 @@ class Participant:
             raise AssertionError(f"unknown cmd {cmd}")
 
     def apply_op(self, op: dict) -> None:
-        """Redo-op application — the only place working state mutates."""
+        """Redo-op application — the only place working state mutates.
+        Every committed metadata/namespace mutation bumps the inode's lease
+        epoch here, so client leases invalidate on the same apply path that
+        WAL replay re-runs (a restarted owner re-derives identical epochs)."""
         st = self.state
         kind = op["kind"]
+        if kind in ("meta_put", "meta_set", "meta_evict", "dir_link",
+                    "dir_set_children", "dir_unlink"):
+            st.bump_lease(op["meta"]["ino"] if kind == "meta_put"
+                          else op["ino"])
         if kind == "meta_put":
             meta = InodeMeta.from_payload(op["meta"])
             st.metas.put(meta)
@@ -241,9 +253,16 @@ class Participant:
         if Cmd(cmd_id) != Cmd.TX_PREPARE_NODELIST:
             # reconfiguration transactions run *during* the read-only window
             st.check_writable()
-        if not st.locks.try_acquire(list(keys), txid):
+        verdict = st.locks.acquire(list(keys), txid, now=start,
+                                   wait_die=st.cfg.lock_mode == "waitdie")
+        if verdict != "granted":
+            # wait-die (§4.4 refined): an older transaction keeps its FIFO
+            # place ("queued") and is handed the lock at release, so its
+            # retry — same TxId — wins; a younger one dies immediately.
+            # Either way this attempt votes no and the coordinator aborts.
             st.bump("lock_conflict")
-            return {"vote": False, "why": "lock"}, start
+            st.bump(f"lock_{verdict}")
+            return {"vote": False, "why": verdict}, start
         st.crash_at("participant_after_lock")
         t = self.log(Cmd(cmd_id), {"txid": txid_p, "ops": ops, "keys": keys},
                      start)
@@ -268,5 +287,9 @@ class Participant:
         txid = txid_from_payload(txid_p)
         if st.txs.completed_outcome(txid) is not None:
             return {"ok": True, "dup": True}, start
+        if not st.txs.is_prepared(txid):
+            # never prepared here: nothing redo-logged to undo, and a
+            # "queued" vote must keep its wait-queue place for the retry
+            return {"ok": True, "noop": True}, start
         t = self.log(Cmd.TX_ABORT, {"txid": txid_p}, start)
         return {"ok": True}, t

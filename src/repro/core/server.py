@@ -59,6 +59,18 @@ class ServerConfig:
     dirty_lowater_bytes: int = 128 << 20
     # base stall per staged write while above the high-watermark
     backpressure_stall_s: float = 0.002
+    # ---- metadata fast paths (§4.4-4.5 optimisations) --------------------
+    # client-lease TTL on lookup/readdir/getattr replies; <= 0 disables
+    # leases (every metadata read goes back to the owner, as before)
+    lease_ttl_s: float = 2.0
+    # lock acquisition policy: "waitdie" = bounded FIFO wait-die queueing,
+    # "voteno" = the paper's all-or-nothing vote-no on any conflict
+    lock_mode: str = "waitdie"
+    lock_queue_depth: int = 4
+    lock_reservation_ttl_s: float = 1.0
+    # same-destination RPC coalescing (prepare/commit fan-out, dirty clears,
+    # migration sends); False reverts to one envelope per sub-call
+    batch_rpcs: bool = True
 
 
 @dataclass
@@ -82,6 +94,7 @@ class CacheServer:
             clock=clock, router=router, cos=cos, hw=hw, cfg=cfg,
             raft=RaftLog(workdir, clock, disk), disk=disk,
             nic=hw.make_nic(node_id))
+        self.state.locks = self.state.make_lock_table()
         # subsystems share the one ServerState
         self.participant = Participant(self.state)
         self.coordinator = Coordinator(self.state, self.participant)
@@ -223,22 +236,31 @@ class CacheServer:
     # =====================================================================
     @rpc_handler()
     def rpc_getattr(self, start: float, ino: int,
-                    nl_version: int | None = None) -> tuple[dict, float]:
+                    nl_version: int | None = None,
+                    lease_epoch: int | None = None) -> tuple[dict, float]:
+        """`lease_epoch` (if given) is a renewal: a stale epoch means some
+        mutation committed since the grant and raises `StaleLeaseError` so
+        the client drops its cached copy (close-to-open preserved)."""
         st = self.state
         st.check_alive()
         st.check_nl(nl_version)
+        st.check_lease(ino, lease_epoch)
         m = st.metas.get(ino)
         if m is None or m.deleted:
             raise FSError(Errno.ENOENT, f"ino {ino}")
-        return m.to_payload(), start
+        p = m.to_payload()
+        p["lease"] = st.lease_grant(ino)
+        return p, start
 
     @rpc_handler()
     def rpc_lookup(self, start: float, parent: int, name: str,
-                   nl_version: int | None = None) -> tuple[dict, float]:
+                   nl_version: int | None = None,
+                   lease_epoch: int | None = None) -> tuple[dict, float]:
         """Single-name lookup in a parent directory this server owns."""
         st = self.state
         st.check_alive()
         st.check_nl(nl_version)
+        st.check_lease(parent, lease_epoch)
         d = st.metas.get(parent)
         if d is None or d.deleted:
             raise FSError(Errno.ENOENT, f"parent {parent}")
@@ -247,20 +269,23 @@ class CacheServer:
         child = d.children.get(name)
         if child is None:
             raise FSError(Errno.ENOENT, f"{parent}/{name}")
-        return {"ino": child}, start
+        return {"ino": child, "lease": st.lease_grant(parent)}, start
 
     @rpc_handler()
     def rpc_readdir(self, start: float, ino: int,
-                    nl_version: int | None = None) -> tuple[dict, float]:
+                    nl_version: int | None = None,
+                    lease_epoch: int | None = None) -> tuple[dict, float]:
         st = self.state
         st.check_alive()
         st.check_nl(nl_version)
+        st.check_lease(ino, lease_epoch)
         d = st.metas.get(ino)
         if d is None or d.deleted:
             raise FSError(Errno.ENOENT, f"ino {ino}")
         if d.kind != InodeKind.DIR:
             raise FSError(Errno.ENOTDIR, f"ino {ino}")
-        return {"children": dict(d.children), "loaded": d.loaded}, start
+        return {"children": dict(d.children), "loaded": d.loaded,
+                "lease": st.lease_grant(ino)}, start
 
     @rpc_handler(reply_bytes=512)
     def rpc_read_chunk(self, start: float, ino: int, chunk_off: int, off: int,

@@ -20,7 +20,7 @@ from .raftlog import RaftLog
 from .simclock import HardwareModel, Resource, SimClock
 from .stores import ChunkTable, MetaTable
 from .txn import LockTable, TxTable
-from .types import Errno, FSError
+from .types import Errno, FSError, StaleLeaseError
 
 if TYPE_CHECKING:  # pragma: no cover
     from .cos import CosStore
@@ -63,6 +63,11 @@ class ServerState:
     # ---- counters / transaction bookkeeping ------------------------------
     ino_counter: int = 1
     txseq: int = 1
+    # per-inode lease epochs (metadata fast path): bumped by every committed
+    # mutation of the inode's metadata/namespace and by migration handoff.
+    # Bumps happen inside the WAL apply path, so replay re-derives the same
+    # epochs and a restarted owner keeps rejecting stale leases.
+    lease_epochs: dict[int, int] = field(default_factory=dict)
     # coordinator dedup: (client_id, seq) -> (txseq, outcome)
     coord_done: dict[tuple[int, int], tuple[int, str]] = field(
         default_factory=dict)
@@ -80,17 +85,22 @@ class ServerState:
     # =====================================================================
     # lifecycle / failure injection
     # =====================================================================
+    def make_lock_table(self) -> LockTable:
+        return LockTable(queue_depth=self.cfg.lock_queue_depth,
+                         reservation_ttl_s=self.cfg.lock_reservation_ttl_s)
+
     def reset_tables(self) -> None:
         """Drop all replay-derived state ahead of a WAL replay."""
         self.metas = MetaTable()
         self.chunks = ChunkTable()
-        self.locks = LockTable()
+        self.locks = self.make_lock_table()
         self.txs = TxTable()
         self.node_list, self.node_list_version = [], 0
         self.ring = HashRing()
         self.ino_counter = 1
         self.coord_done, self.coord_pending = {}, {}
         self.mpu_pending = {}
+        self.lease_epochs = {}
 
     def arm_crash(self, point: str) -> None:
         self.crash_points.add(point)
@@ -118,6 +128,33 @@ class ServerState:
     def check_writable(self) -> None:
         if self.read_only:
             raise FSError(Errno.ECONFLICT, "server is read-only (migrating)")
+
+    # =====================================================================
+    # client leases (metadata fast path)
+    # =====================================================================
+    def lease_epoch(self, ino: int) -> int:
+        return self.lease_epochs.get(ino, 0)
+
+    def bump_lease(self, ino: int) -> None:
+        self.lease_epochs[ino] = self.lease_epochs.get(ino, 0) + 1
+
+    def lease_grant(self, ino: int) -> dict | None:
+        """Lease descriptor attached to lookup/readdir/getattr replies; None
+        when leases are disabled (`lease_ttl_s <= 0`)."""
+        ttl = self.cfg.lease_ttl_s
+        if ttl <= 0:
+            return None
+        return {"ino": ino, "epoch": self.lease_epoch(ino), "ttl": ttl}
+
+    def check_lease(self, ino: int, lease_epoch: int | None) -> None:
+        """Reject a renewal that carries a stale epoch: some mutation
+        committed (or the inode migrated in) since the lease was granted."""
+        if lease_epoch is None:
+            return
+        cur = self.lease_epoch(ino)
+        if lease_epoch != cur:
+            self.bump("lease_stale")
+            raise StaleLeaseError(ino, lease_epoch, cur)
 
     # =====================================================================
     # placement / allocation helpers

@@ -2,23 +2,29 @@
 
 Each server keeps:
 
-* a `LockTable` — per-object exclusive locks held by *prepared* transactions;
-  prepare is all-or-nothing and non-blocking (a participant that cannot lock
-  votes no, the coordinator aborts, the client retries), so there are no
-  distributed deadlocks;
+* a `LockTable` — per-object exclusive locks held by *prepared* transactions.
+  The paper's protocol is all-or-nothing vote-no on any conflict; this table
+  additionally supports bounded FIFO *wait-die* queueing (`lock_mode=
+  "waitdie"`): an older transaction that hits a conflict enqueues behind the
+  holder (bounded queue) and is handed the lock when the holder releases,
+  while a younger transaction dies immediately — the classic wait-die
+  ordering, so deadlock freedom is preserved without global lock ordering;
 * a `TxTable` — prepared (redo-logged, not yet applied) transactions plus a
   bounded dedup map of completed transaction results, so a retried RPC series
   with the same TxId is idempotent (§4.5: "objcache detects a duplicated
   request [and] replies with old results as done in the Raft RPCs").
 
 Both tables are *derived state*: they are reconstructed from the Raft log on
-replay (PREPARE entries re-acquire locks; COMMIT/ABORT entries release them),
-which is exactly what lets 2PC survive participant crashes (§4.4 last para).
+replay (PREPARE entries re-acquire locks; COMMIT/ABORT entries release them).
+Wait queues hold transactions that have *not* prepared (nothing logged yet),
+so replay rebuilds holders and leaves queues empty; the waiters' coordinators
+re-enqueue on retry with the same TxId — which is exactly what lets 2PC
+survive participant crashes (§4.4 last para).
 """
 
 from __future__ import annotations
 
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 
 from .types import Cmd, TxId
@@ -39,29 +45,142 @@ class PreparedTx:
     locked_keys: list[str] = field(default_factory=list)
 
 
+def _opkey(txid: TxId) -> tuple[int, int]:
+    """Logical-operation identity: retries of one file operation reuse the
+    same (client_id, seq) but get a fresh txseq, and the queue position /
+    reservation must survive across attempts."""
+    return (txid.client_id, txid.seq)
+
+
 class LockTable:
-    def __init__(self) -> None:
+    """Per-key exclusive locks with optional bounded wait-die queues.
+
+    Queue membership and reservations are keyed by the logical operation
+    (`(client_id, seq)`) rather than the full TxId: a retried attempt (new
+    txseq, §4.5) claims the place — and the hand-off — its previous attempt
+    earned.  A *reservation* is a lock handed to the head waiter when the
+    previous holder released; the waiter's coordinator has not retried yet,
+    so the reservation carries an expiry (`grant_t + reservation_ttl_s` on
+    the sim clock) after which any acquirer may steal it — an abandoned
+    waiter can never wedge a hot key."""
+
+    def __init__(self, queue_depth: int = 4,
+                 reservation_ttl_s: float = 1.0) -> None:
         self._locks: dict[str, TxId] = {}
+        self.queue_depth = queue_depth
+        self.reservation_ttl_s = reservation_ttl_s
+        # key -> FIFO of waiting ops (wait-die: all waiters are older than
+        # the holder they queued behind), as (client_id, seq) -> repr TxId
+        self._queues: dict[str, deque[tuple[int, int]]] = {}
+        self._waiters: dict[tuple[int, int], TxId] = {}
+        # op -> expiry time of an unclaimed hand-off (reservation)
+        self._reserved_until: dict[tuple[int, int], float] = {}
 
-    def try_acquire(self, keys: list[str], txid: TxId) -> bool:
-        """All-or-nothing; re-acquisition by the same TxId succeeds (retry)."""
-        for k in keys:
-            holder = self._locks.get(k)
-            if holder is not None and holder != txid:
-                return False
-        for k in keys:
-            self._locks[k] = txid
-        return True
+    # ---- acquisition -----------------------------------------------------------
+    def _conflict(self, key: str, txid: TxId, now: float) -> TxId | None:
+        """Current effective holder of `key` if it blocks `txid`."""
+        holder = self._locks.get(key)
+        if holder is None or _opkey(holder) == _opkey(txid):
+            return None                    # free, ours, or our prior attempt
+        exp = self._reserved_until.get(_opkey(holder))
+        if exp is not None and now > exp:
+            # expired reservation: the waiter never came back — steal it
+            self._drop_holder(holder)
+            return None
+        return holder
 
-    def release(self, txid: TxId) -> None:
+    def try_acquire(self, keys: list[str], txid: TxId,
+                    now: float = 0.0) -> bool:
+        """Legacy all-or-nothing interface (vote-no on conflict); also claims
+        a reservation held for `txid`.  Used by WAL replay and vote-no mode."""
+        return self.acquire(keys, txid, now, wait_die=False) == "granted"
+
+    def acquire(self, keys: list[str], txid: TxId, now: float,
+                wait_die: bool = True) -> str:
+        """All-or-nothing acquire; returns "granted" | "queued" | "die".
+
+        wait-die on conflict: if `txid` is older than every blocking holder
+        and each blocked key has queue space, enqueue (FIFO) and return
+        "queued" — the release hand-off will grant the lock before the
+        operation's retry (same client_id/seq) comes back to claim it.  A
+        younger `txid` (or a full queue) returns "die" ("queued" and "die"
+        both read as vote-no to the 2PC; the difference is whether the
+        operation kept its place in line)."""
+        op = _opkey(txid)
+        blocked: list[tuple[str, TxId]] = []
+        for k in keys:
+            h = self._conflict(k, txid, now)
+            if h is not None:
+                blocked.append((k, h))
+        if not blocked:
+            for k in keys:
+                self._locks[k] = txid
+            self._reserved_until.pop(op, None)     # claimed in person
+            self._unqueue(op)                      # no longer waiting anywhere
+            return "granted"
+        if not wait_die:
+            return "die"
+        for k, h in blocked:
+            if not txid.age_key < h.age_key:
+                return "die"                       # younger dies immediately
+            q = self._queues.get(k)
+            if q is not None and op not in q and len(q) >= self.queue_depth:
+                return "die"                       # bounded queue is full
+        for k, _h in blocked:
+            q = self._queues.setdefault(k, deque())
+            if op not in q:
+                q.append(op)
+        self._waiters[op] = txid
+        return "queued"
+
+    # ---- release / hand-off ----------------------------------------------------
+    def _drop_holder(self, txid: TxId) -> None:
+        self._reserved_until.pop(_opkey(txid), None)
         for k in [k for k, h in self._locks.items() if h == txid]:
             del self._locks[k]
 
+    def _unqueue(self, op: tuple[int, int]) -> None:
+        self._waiters.pop(op, None)
+        for k in [k for k, q in self._queues.items() if op in q]:
+            self._queues[k].remove(op)
+            if not self._queues[k]:
+                del self._queues[k]
+
+    def release(self, txid: TxId, now: float = 0.0) -> None:
+        """Free `txid`'s locks and hand each freed key to its oldest waiter
+        as a reservation (claimed when the waiter's retry comes back)."""
+        op = _opkey(txid)
+        freed = [k for k, h in self._locks.items() if _opkey(h) == op]
+        self._reserved_until.pop(op, None)
+        for k in freed:
+            del self._locks[k]
+        self._unqueue(op)                          # also stop waiting
+        for k in freed:
+            q = self._queues.get(k)
+            while q:
+                wop = q.popleft()
+                w = self._waiters.get(wop)
+                if w is not None and self._conflict(k, w, now) is None:
+                    self._locks[k] = w
+                    self._reserved_until.setdefault(
+                        wop, now + self.reservation_ttl_s)
+                    break
+            if q is not None and not q:
+                del self._queues[k]
+
+    # ---- introspection ---------------------------------------------------------
     def holder(self, key: str) -> TxId | None:
         return self._locks.get(key)
 
     def held_count(self) -> int:
         return len(self._locks)
+
+    def queued(self, key: str) -> list[TxId]:
+        return [self._waiters[op] for op in self._queues.get(key, ())
+                if op in self._waiters]
+
+    def queued_count(self) -> int:
+        return sum(len(q) for q in self._queues.values())
 
 
 class TxTable:

@@ -25,6 +25,16 @@ class TxId(NamedTuple):
     def pretty(self) -> str:
         return f"tx({self.client_id}.{self.seq}.{self.txseq})"
 
+    @property
+    def age_key(self) -> tuple[int, int]:
+        """Wait-die age: lower sorts *older*.  SeqNum first (a client's
+        monotonic local clock approximates start order), client id breaks
+        ties deterministically.  TxSeqNum is excluded: retries of one
+        operation mint a fresh TxSeqNum but keep (ClientId, SeqNum), so a
+        died transaction keeps its age and eventually becomes the oldest —
+        the classic wait-die no-starvation argument."""
+        return (self.seq, self.client_id)
+
 
 class Cmd(enum.IntEnum):
     """Raft state-machine command ids (paper: 72 variants; we keep the full
@@ -90,6 +100,18 @@ class FSError(Exception):
     def __init__(self, errno: Errno, msg: str = "") -> None:
         super().__init__(f"{errno.name}: {msg}")
         self.errno = errno
+
+
+class StaleLeaseError(FSError):
+    """A request carried a lease epoch that a committed mutation has since
+    bumped (ESTALE).  Distinct from the node-list ESTALE of §4.3: the client
+    drops the cached lease and re-fetches, without re-pulling the node list."""
+
+    def __init__(self, ino: int, client_epoch: int, server_epoch: int) -> None:
+        super().__init__(Errno.ESTALE,
+                         f"lease on ino {ino}: epoch {client_epoch} != "
+                         f"{server_epoch}")
+        self.ino = ino
 
 
 class InodeKind(enum.IntEnum):

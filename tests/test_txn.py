@@ -71,9 +71,10 @@ def test_lock_conflict_aborts(workdir):
     # no partial application anywhere (atomicity)
     assert not _applied(cl, 13)
     assert cl.servers[nodes[0]].metas.get(INO_A) is None
-    # after the blocker aborts, a retry with a fresh seq commits
+    # after the blocker aborts, the client's retry (same client_id/seq, as
+    # the FUSE client re-issues the same op) claims the hand-off and commits
     p1.rpc_abort(0.0, txid_p={"client_id": 9, "seq": 9, "txseq": 9})
-    res, _ = coord.coord_execute(0.0, client_id=7, seq=2,
+    res, _ = coord.coord_execute(0.0, client_id=7, seq=1,
                                  plan=two_node_plan(cl, 13))
     assert res["outcome"] == "commit"
     assert _applied(cl, 13)
@@ -158,4 +159,141 @@ def test_single_node_fast_path_skips_2pc(workdir):
     assert res["outcome"] == "commit"
     assert s.stats.get("tx_local", 0) == 1
     assert s.stats.get("tx_commit", 0) == before  # no 2PC records
+    cl.close()
+
+
+# =========================================================================
+# wait-die lock queueing (bounded FIFO queues + reservation hand-off)
+# =========================================================================
+def test_waitdie_older_queues_younger_dies():
+    from repro.core.txn import LockTable
+    from repro.core.types import TxId
+    lt = LockTable(queue_depth=4)
+    holder = TxId(1, 5, 5)
+    assert lt.acquire(["k"], holder, now=0.0) == "granted"
+    older = TxId(1, 3, 3)      # lower seq = older under wait-die ordering
+    younger = TxId(1, 9, 9)
+    assert lt.acquire(["k"], older, now=0.0) == "queued"
+    assert lt.acquire(["k"], younger, now=0.0) == "die"
+    assert lt.queued("k") == [older]
+
+
+def test_waitdie_release_hands_off_to_oldest_waiter():
+    from repro.core.txn import LockTable
+    from repro.core.types import TxId
+    lt = LockTable(queue_depth=4, reservation_ttl_s=1.0)
+    holder, w1, w2 = TxId(1, 5, 5), TxId(1, 2, 2), TxId(1, 3, 3)
+    lt.acquire(["k"], holder, now=0.0)
+    assert lt.acquire(["k"], w1, now=0.0) == "queued"
+    assert lt.acquire(["k"], w2, now=0.0) == "queued"
+    lt.release(holder, now=0.1)
+    # FIFO: w1 enqueued first, so the lock transfers to w1 as a reservation
+    assert lt.holder("k") == w1
+    # w1's retry claims it in person
+    assert lt.acquire(["k"], w1, now=0.2) == "granted"
+    lt.release(w1, now=0.3)
+    assert lt.holder("k") == w2
+
+
+def test_waitdie_expired_reservation_is_stolen():
+    from repro.core.txn import LockTable
+    from repro.core.types import TxId
+    lt = LockTable(queue_depth=4, reservation_ttl_s=0.5)
+    holder, waiter, late = TxId(1, 5, 5), TxId(1, 2, 2), TxId(1, 7, 7)
+    lt.acquire(["k"], holder, now=0.0)
+    lt.acquire(["k"], waiter, now=0.0)
+    lt.release(holder, now=0.1)            # reserved for waiter until 0.6
+    assert lt.acquire(["k"], late, now=0.2) == "die"   # reservation holds
+    assert lt.acquire(["k"], late, now=0.7) == "granted"  # abandoned: stolen
+    lt.release(late, now=0.8)
+
+
+def test_waitdie_bounded_queue_dies_when_full():
+    from repro.core.txn import LockTable
+    from repro.core.types import TxId
+    lt = LockTable(queue_depth=2)
+    lt.acquire(["k"], TxId(1, 50, 50), now=0.0)
+    assert lt.acquire(["k"], TxId(1, 10, 10), now=0.0) == "queued"
+    assert lt.acquire(["k"], TxId(1, 11, 11), now=0.0) == "queued"
+    assert lt.acquire(["k"], TxId(1, 12, 12), now=0.0) == "die"
+    assert lt.queued_count() == 2
+
+
+def test_voteno_mode_never_queues(workdir):
+    cl = make_cluster(workdir)
+    cl.cfg.lock_mode = "voteno"
+    nodes = cl.node_list()
+    p1 = cl.servers[nodes[1]]
+    p1.rpc_prepare(0.0, txid_p={"client_id": 9, "seq": 9, "txseq": 9},
+                   cmd_id=int(Cmd.TX_PREPARE_META), ops=[], keys=["k1"])
+    res, _ = p1.rpc_prepare(0.0,
+                            txid_p={"client_id": 1, "seq": 1, "txseq": 1},
+                            cmd_id=int(Cmd.TX_PREPARE_META), ops=[],
+                            keys=["k1"])
+    assert res == {"vote": False, "why": "die"}
+    assert p1.locks.queued_count() == 0
+    cl.close()
+
+
+def test_waitdie_prepare_vote_carries_verdict(workdir):
+    """An older conflicting prepare votes no with why="queued" and keeps its
+    place; the blocker's abort hands the lock over, so the *same operation*
+    (same client_id/seq, fresh txseq) retried by the coordinator commits."""
+    cl = make_cluster(workdir)
+    nodes = cl.node_list()
+    coord = cl.servers[nodes[0]]
+    p1 = cl.servers[nodes[1]]
+    p1.rpc_prepare(0.0, txid_p={"client_id": 9, "seq": 9, "txseq": 9},
+                   cmd_id=int(Cmd.TX_PREPARE_META), ops=[], keys=["k1"])
+    res, _ = coord.coord_execute(0.0, client_id=7, seq=1,
+                                 plan=two_node_plan(cl, 13))
+    assert res == {"outcome": "abort", "why": "queued"}
+    # the abort decision must NOT evict the queued (never-prepared) waiter
+    assert p1.locks.queued_count() == 1
+    p1.rpc_abort(0.0, txid_p={"client_id": 9, "seq": 9, "txseq": 9})
+    # hand-off: the released lock is reserved for the queued operation, and
+    # the client's retry reuses (client_id, seq) so it claims the reservation
+    res, _ = coord.coord_execute(0.0, client_id=7, seq=1,
+                                 plan=two_node_plan(cl, 13))
+    assert res["outcome"] == "commit"
+    assert _applied(cl, 13)
+    cl.close()
+
+
+def test_waitdie_crash_mid_queue_replay_rebuilds_holders_only(workdir):
+    """Queued waiters are un-logged by design (they never prepared): replay
+    reconstructs the holder's lock, leaves the queue empty, and the waiter's
+    coordinator re-enqueues on retry with the same TxId."""
+    cl = make_cluster(workdir)
+    nodes = cl.node_list()
+    p1 = cl.servers[nodes[1]]
+    holder_p = {"client_id": 9, "seq": 9, "txseq": 9}
+    p1.rpc_prepare(0.0, txid_p=holder_p,
+                   cmd_id=int(Cmd.TX_PREPARE_META),
+                   ops=[_meta_op(INO_B, 55)], keys=["k1"])
+    # an older transaction queues behind the prepared holder
+    res, _ = p1.rpc_prepare(0.0,
+                            txid_p={"client_id": 7, "seq": 1, "txseq": 2},
+                            cmd_id=int(Cmd.TX_PREPARE_META), ops=[],
+                            keys=["k1"])
+    assert res == {"vote": False, "why": "queued"}
+    assert p1.locks.queued_count() == 1
+    p1.crash()
+    cl.restart_node(nodes[1])
+    p1 = cl.servers[nodes[1]]
+    # holder re-derived from the WAL, queue empty
+    assert p1.locks.holder("k1") is not None
+    assert p1.locks.queued_count() == 0
+    # the waiter's retry re-enqueues; after the holder commits it proceeds
+    res, _ = p1.rpc_prepare(0.0,
+                            txid_p={"client_id": 7, "seq": 1, "txseq": 2},
+                            cmd_id=int(Cmd.TX_PREPARE_META), ops=[],
+                            keys=["k1"])
+    assert res == {"vote": False, "why": "queued"}
+    p1.rpc_commit(0.0, txid_p=holder_p)
+    res, _ = p1.rpc_prepare(0.1,
+                            txid_p={"client_id": 7, "seq": 1, "txseq": 2},
+                            cmd_id=int(Cmd.TX_PREPARE_META), ops=[],
+                            keys=["k1"])
+    assert res["vote"] is True
     cl.close()
