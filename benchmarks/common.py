@@ -6,15 +6,19 @@ the *ratios* the paper reports, which is what §Paper-fidelity checks."""
 
 from __future__ import annotations
 
+import argparse
+import contextlib
 import json
 import os
 import shutil
+import sys
 import tempfile
+from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import (BucketMount, ClientConfig, Cluster, ObjcacheClient,
-                        ObjcacheFS, ServerConfig)
+from repro.core import (BucketMount, ClientConfig, Cluster, HardwareModel,
+                        ObjcacheClient, ObjcacheFS, ServerConfig)
 
 REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
                           "bench")
@@ -29,21 +33,37 @@ def blob(n: int, seed: int = 0) -> bytes:
 
 
 def make_cluster(workdir: str, n: int, chunk: int = CHUNK,
-                 bucket: str = "bench") -> Cluster:
-    cl = Cluster(workdir, [BucketMount(bucket, bucket)],
-                 cfg=ServerConfig(chunk_size=chunk))
+                 bucket: str = "bench", hw: HardwareModel | None = None,
+                 cfg: ServerConfig | None = None) -> Cluster:
+    cl = Cluster(workdir, [BucketMount(bucket, bucket)], hw=hw,
+                 cfg=cfg or ServerConfig(chunk_size=chunk))
     cl.start(n)
     return cl
 
 
+@contextlib.contextmanager
+def bench_env(prefix: str, n: int, chunk: int = CHUNK, bucket: str = "bench",
+              hw: HardwareModel | None = None,
+              cfg: ServerConfig | None = None):
+    """Temp workdir + started cluster, torn down on exit — the setup every
+    benchmark used to hand-roll (mkdtemp / close / rmtree)."""
+    wd = tempfile.mkdtemp(prefix=prefix)
+    cl = make_cluster(wd, n=n, chunk=chunk, bucket=bucket, hw=hw, cfg=cfg)
+    try:
+        yield cl
+    finally:
+        cl.close()
+        shutil.rmtree(wd, ignore_errors=True)
+
+
 def make_fs(cl: Cluster, consistency: str = "weak",
             deployment: str = "detached", node: str | None = None,
-            readahead: int = 8) -> ObjcacheFS:
+            readahead: int = 8, client_id: int | None = None) -> ObjcacheFS:
     client = ObjcacheClient(
         cl.router, cl.clock, node or cl.node_list()[0],
         ClientConfig(consistency=consistency, deployment=deployment,
                      readahead_chunks=readahead),
-        chunk_size=cl.cfg.chunk_size)
+        chunk_size=cl.cfg.chunk_size, client_id=client_id)
     return ObjcacheFS(client)
 
 
@@ -82,48 +102,46 @@ def fastpath_section(n_nodes: int = 4, n_dirs: int = 4,
     coalesce to O(destinations) envelopes when batching is on)."""
     out: dict = {}
     for mode in ("off", "on"):
-        wd = tempfile.mkdtemp(prefix=f"bench-fastpath-{mode}-")
-        cl = make_cluster(wd, n=n_nodes)
-        if mode == "off":
-            fastpath_off(cl)
-        fs = make_fs(cl)
-        for d in range(n_dirs):
-            fs.makedirs(f"/bench/d{d}")
-        for d in range(n_dirs):
-            for i in range(files_per_dir):
-                fs.write_file(f"/bench/d{d}/f{i}.bin", blob(4096, d * 64 + i))
-        loop_t0, loop_env = cl.clock.now, cl.router.rpc_count
-        lat: list[float] = []
-        for _ in range(rounds):
+        with bench_env(f"bench-fastpath-{mode}-", n=n_nodes) as cl:
+            if mode == "off":
+                fastpath_off(cl)
+            fs = make_fs(cl)
             for d in range(n_dirs):
-                t0 = cl.clock.now
-                fs.listdir(f"/bench/d{d}")
-                lat.append(cl.clock.now - t0)
+                fs.makedirs(f"/bench/d{d}")
+            for d in range(n_dirs):
                 for i in range(files_per_dir):
+                    fs.write_file(f"/bench/d{d}/f{i}.bin",
+                                  blob(4096, d * 64 + i))
+            loop_t0, loop_env = cl.clock.now, cl.router.rpc_count
+            lat: list[float] = []
+            for _ in range(rounds):
+                for d in range(n_dirs):
                     t0 = cl.clock.now
-                    fs.stat(f"/bench/d{d}/f{i}.bin")
+                    fs.listdir(f"/bench/d{d}")
                     lat.append(cl.clock.now - t0)
-        cell = {
-            "rpc_envelopes_total": cl.router.rpc_count,
-            "rpc_envelopes_meta_loop": cl.router.rpc_count - loop_env,
-            "meta_loop_s": round(cl.clock.now - loop_t0, 6),
-            "meta_ops": len(lat),
-            "meta_p50_ms": round(pctl(lat, 50) * 1e3, 6),
-            "meta_p99_ms": round(pctl(lat, 99) * 1e3, 6),
-            "batched_subcalls": cl.router.batched_subcalls,
-            "lease_hits": sum(fs.client.stats.get(k, 0) for k in
-                              ("lease_attr_hits", "lease_lookup_hits",
-                               "lease_readdir_hits")),
-        }
-        if migrate:
-            env0 = cl.router.rpc_count
-            t0 = cl.clock.now
-            cl.add_node()
-            cell["join_envelopes"] = cl.router.rpc_count - env0
-            cell["join_s"] = round(cl.clock.now - t0, 6)
-        out[mode] = cell
-        cl.close()
-        shutil.rmtree(wd, ignore_errors=True)
+                    for i in range(files_per_dir):
+                        t0 = cl.clock.now
+                        fs.stat(f"/bench/d{d}/f{i}.bin")
+                        lat.append(cl.clock.now - t0)
+            cell = {
+                "rpc_envelopes_total": cl.router.rpc_count,
+                "rpc_envelopes_meta_loop": cl.router.rpc_count - loop_env,
+                "meta_loop_s": round(cl.clock.now - loop_t0, 6),
+                "meta_ops": len(lat),
+                "meta_p50_ms": round(pctl(lat, 50) * 1e3, 6),
+                "meta_p99_ms": round(pctl(lat, 99) * 1e3, 6),
+                "batched_subcalls": cl.router.batched_subcalls,
+                "lease_hits": sum(fs.client.stats.get(k, 0) for k in
+                                  ("lease_attr_hits", "lease_lookup_hits",
+                                   "lease_readdir_hits")),
+            }
+            if migrate:
+                env0 = cl.router.rpc_count
+                t0 = cl.clock.now
+                cl.add_node()
+                cell["join_envelopes"] = cl.router.rpc_count - env0
+                cell["join_s"] = round(cl.clock.now - t0, 6)
+            out[mode] = cell
     off, on = out["off"], out["on"]
     out["rpc_reduction_pct"] = round(100 * (1 - on["rpc_envelopes_total"] /
                                             max(off["rpc_envelopes_total"],
@@ -131,6 +149,82 @@ def fastpath_section(n_nodes: int = 4, n_dirs: int = 4,
     out["meta_p99_reduction_pct"] = round(
         100 * (1 - on["meta_p99_ms"] / max(off["meta_p99_ms"], 1e-9)), 1)
     return out
+
+
+# -------------------------------------------------------------------------
+# baseline regression gates (shared by the *_smoke benchmarks in check.sh)
+# -------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Gate:
+    """One gated metric: the report value at (possibly dotted) key `metric`
+    must not exceed `baseline * (1 + tolerance) + slack`.  `slack` is the
+    absolute headroom for near-zero baselines (e.g. a 0.0 shed rate, where
+    any multiplicative tolerance would forbid a single shed)."""
+
+    metric: str
+    tolerance: float = 0.20
+    slack: float = 0.0
+
+
+def dig(d: dict, dotted: str):
+    for part in dotted.split("."):
+        d = d[part]
+    return d
+
+
+def check_baseline(tag: str, rep: dict, baseline_file: str,
+                   gates: list[Gate]) -> int:
+    path = os.path.join(REPORT_DIR, baseline_file)
+    if not os.path.exists(path):
+        print(f"[{tag}] no baseline at {path}; run --update-baseline first",
+              file=sys.stderr)
+        return 1
+    with open(path) as f:
+        base = json.load(f)
+    rc = 0
+    for g in gates:
+        cur, ref = dig(rep, g.metric), dig(base, g.metric)
+        limit = ref * (1.0 + g.tolerance) + g.slack
+        if cur > limit:
+            print(f"[{tag}] REGRESSION: {g.metric} {cur} > {limit:.4f} "
+                  f"(baseline {ref} +{g.tolerance:.0%}"
+                  f"{f' +{g.slack}' if g.slack else ''})", file=sys.stderr)
+            rc = 1
+    if rc == 0:
+        ok = ", ".join(f"{g.metric}={dig(rep, g.metric)}" for g in gates)
+        print(f"[{tag}] OK: {ok} within tolerance of baseline")
+    return rc
+
+
+def gate_main(tag: str, run_fn, baseline_file: str, gates: list[Gate],
+              baseline_keys: list[str]) -> int:
+    """The --check / --update-baseline CLI shared by the smoke benchmarks:
+    run the workload, then either gate the listed metrics against the
+    checked-in baseline or record a new baseline from `baseline_keys`."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if gated metrics regress vs baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="record current metrics as the baseline")
+    args = ap.parse_args()
+    rep = run_fn()
+    if args.update_baseline:
+        os.makedirs(REPORT_DIR, exist_ok=True)
+        payload: dict = {}
+        for key in baseline_keys:
+            cur: dict = payload
+            parts = key.split(".")
+            for part in parts[:-1]:
+                cur = cur.setdefault(part, {})
+            cur[parts[-1]] = dig(rep, key)
+        with open(os.path.join(REPORT_DIR, baseline_file), "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[{tag}] baseline updated: " + ", ".join(
+            f"{g.metric}={dig(rep, g.metric)}" for g in gates))
+        return 0
+    if args.check:
+        return check_baseline(tag, rep, baseline_file, gates)
+    return 0
 
 
 def rpc_summary(cl: Cluster, top: int = 8) -> dict:

@@ -12,50 +12,41 @@ A >20% regression fails the check (exit 1).
 
 from __future__ import annotations
 
-import argparse
-import json
-import os
-import shutil
 import sys
-import tempfile
 
 import numpy as np
 
-from .common import REPORT_DIR, blob, make_cluster, make_fs, save_report
+from .common import Gate, bench_env, blob, gate_main, make_fs, save_report
 
 N_FILES = 256
 N_NODES = 6
 N_DIRS = 8
-REGRESSION_TOLERANCE = 0.20
 
-BASELINE_PATH = os.path.join(REPORT_DIR, "flush_smoke_baseline.json")
+GATES = [Gate("drain_s")]
 
 
 def run(quiet: bool = False) -> dict:
-    wd = tempfile.mkdtemp(prefix="bench-flush-smoke-")
-    cl = make_cluster(wd, n=N_NODES)
-    fs = make_fs(cl)
-    rng = np.random.default_rng(42)
-    total = 0
-    for d in range(N_DIRS):
-        fs.makedirs(f"/bench/d{d}")
-    for i in range(N_FILES):
-        sz = int(rng.integers(64, 256)) << 10
-        total += sz
-        fs.write_file(f"/bench/d{i % N_DIRS}/f{i}.bin", blob(sz, i))
-    t0 = cl.clock.now
-    flushed = cl.drain_dirty(max_rounds=32)
-    drain_s = cl.clock.now - t0
-    rep = {
-        "files": N_FILES,
-        "nodes": N_NODES,
-        "total_mb": round(total / 1e6, 1),
-        "drain_s": round(drain_s, 6),
-        "flushed": flushed,
-        "flusher": cl.flusher.stats(),
-    }
-    cl.close()
-    shutil.rmtree(wd, ignore_errors=True)
+    with bench_env("bench-flush-smoke-", n=N_NODES) as cl:
+        fs = make_fs(cl)
+        rng = np.random.default_rng(42)
+        total = 0
+        for d in range(N_DIRS):
+            fs.makedirs(f"/bench/d{d}")
+        for i in range(N_FILES):
+            sz = int(rng.integers(64, 256)) << 10
+            total += sz
+            fs.write_file(f"/bench/d{i % N_DIRS}/f{i}.bin", blob(sz, i))
+        t0 = cl.clock.now
+        flushed = cl.drain_dirty(max_rounds=32)
+        drain_s = cl.clock.now - t0
+        rep = {
+            "files": N_FILES,
+            "nodes": N_NODES,
+            "total_mb": round(total / 1e6, 1),
+            "drain_s": round(drain_s, 6),
+            "flushed": flushed,
+            "flusher": cl.flusher.stats(),
+        }
     save_report("flush_smoke", rep)
     if not quiet:
         print(f"[flush-smoke] drained {flushed} files "
@@ -63,42 +54,9 @@ def run(quiet: bool = False) -> dict:
     return rep
 
 
-def check(rep: dict) -> int:
-    if not os.path.exists(BASELINE_PATH):
-        print(f"[flush-smoke] no baseline at {BASELINE_PATH}; "
-              "run --update-baseline first", file=sys.stderr)
-        return 1
-    with open(BASELINE_PATH) as f:
-        base = json.load(f)
-    limit = base["drain_s"] * (1.0 + REGRESSION_TOLERANCE)
-    if rep["drain_s"] > limit:
-        print(f"[flush-smoke] REGRESSION: drain {rep['drain_s']:.3f}s > "
-              f"{limit:.3f}s (baseline {base['drain_s']:.3f}s "
-              f"+{REGRESSION_TOLERANCE:.0%})", file=sys.stderr)
-        return 1
-    print(f"[flush-smoke] OK: drain {rep['drain_s']:.3f}s within "
-          f"{REGRESSION_TOLERANCE:.0%} of baseline {base['drain_s']:.3f}s")
-    return 0
-
-
 def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--check", action="store_true",
-                    help="exit 1 if drain time regresses >20%% vs baseline")
-    ap.add_argument("--update-baseline", action="store_true",
-                    help="record the current drain time as the baseline")
-    args = ap.parse_args()
-    rep = run()
-    if args.update_baseline:
-        os.makedirs(REPORT_DIR, exist_ok=True)
-        with open(BASELINE_PATH, "w") as f:
-            json.dump({"files": rep["files"], "nodes": rep["nodes"],
-                       "drain_s": rep["drain_s"]}, f, indent=1)
-        print(f"[flush-smoke] baseline updated: {rep['drain_s']:.3f}s")
-        return 0
-    if args.check:
-        return check(rep)
-    return 0
+    return gate_main("flush-smoke", run, "flush_smoke_baseline.json", GATES,
+                     baseline_keys=["files", "nodes", "drain_s"])
 
 
 if __name__ == "__main__":

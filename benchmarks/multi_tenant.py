@@ -20,16 +20,14 @@ missing in PR 6; this replaces it).  Three sections:
 
 from __future__ import annotations
 
-import shutil
 import sys
-import tempfile
 
 import numpy as np
 
 from repro.core import Errno, FSError
 from repro.core.types import Cmd, InodeKind, meta_key
 
-from .common import (blob, fastpath_off, make_cluster, make_fs, pctl,
+from .common import (bench_env, blob, fastpath_off, make_fs, pctl,
                      rpc_summary, save_report)
 
 N_TENANTS = 8
@@ -45,136 +43,132 @@ HOT_ROUNDS = 6
 def _tenant_workload(mode: str) -> dict:
     """Closed-loop: each round every tenant stats a file, lists its own dir,
     lists the shared dir, and every 3rd round reads one small file."""
-    wd = tempfile.mkdtemp(prefix=f"bench-mt-{mode}-")
-    cl = make_cluster(wd, n=N_NODES)
-    if mode == "off":
-        fastpath_off(cl)
-    nodes = cl.node_list()
-    tenants = [make_fs(cl, node=nodes[i % len(nodes)])
-               for i in range(N_TENANTS)]
-    admin = tenants[0]
-    admin.makedirs("/bench/shared")
-    admin.write_file("/bench/shared/manifest.bin", blob(4096, 999))
-    for i, fs in enumerate(tenants):
-        fs.makedirs(f"/bench/t{i}")
-        for j in range(FILES_PER_TENANT):
-            fs.write_file(f"/bench/t{i}/f{j}.bin", blob(8192, i * 64 + j))
-    rng = np.random.default_rng(SEED)
-    t_loop0, env0 = cl.clock.now, cl.router.rpc_count
-    lat: list[float] = []
-    busy = [0.0] * N_TENANTS
-    for r in range(ROUNDS):
+    with bench_env(f"bench-mt-{mode}-", n=N_NODES) as cl:
+        if mode == "off":
+            fastpath_off(cl)
+        nodes = cl.node_list()
+        tenants = [make_fs(cl, node=nodes[i % len(nodes)])
+                   for i in range(N_TENANTS)]
+        admin = tenants[0]
+        admin.makedirs("/bench/shared")
+        admin.write_file("/bench/shared/manifest.bin", blob(4096, 999))
         for i, fs in enumerate(tenants):
-            j = int(rng.integers(FILES_PER_TENANT))
-            ops = [lambda: fs.stat(f"/bench/t{i}/f{j}.bin"),
-                   lambda: fs.listdir(f"/bench/t{i}"),
-                   lambda: fs.listdir("/bench/shared"),
-                   lambda: fs.exists("/bench/shared/manifest.bin")]
-            if r % 3 == 2:
-                ops.append(lambda: fs.read_file(f"/bench/t{i}/f{j}.bin"))
-            for op in ops:
-                t0 = cl.clock.now
-                op()
-                dt = cl.clock.now - t0
-                lat.append(dt)
-                busy[i] += dt
-    makespan = cl.clock.now - t_loop0
-    lease_hits = sum(fs.client.stats.get(k, 0) for fs in tenants for k in
-                     ("lease_attr_hits", "lease_lookup_hits",
-                      "lease_readdir_hits"))
-    cell = {
-        "tenants": N_TENANTS, "nodes": N_NODES, "rounds": ROUNDS,
-        "meta_ops": len(lat),
-        "makespan_s": round(makespan, 6),
-        "throughput_ops_s": round(len(lat) / max(makespan, 1e-9), 1),
-        "meta_p50_ms": round(pctl(lat, 50) * 1e3, 6),
-        "meta_p99_ms": round(pctl(lat, 99) * 1e3, 6),
-        "rpc_envelopes_total": cl.router.rpc_count,
-        "rpc_envelopes_loop": cl.router.rpc_count - env0,
-        "batched_subcalls": cl.router.batched_subcalls,
-        "lease_hits": lease_hits,
-        "fairness_busy_ratio": round(max(busy) / max(min(busy), 1e-9), 3),
-        "rpc_methods": rpc_summary(cl),
-    }
-    cl.close()
-    shutil.rmtree(wd, ignore_errors=True)
-    return cell
+            fs.makedirs(f"/bench/t{i}")
+            for j in range(FILES_PER_TENANT):
+                fs.write_file(f"/bench/t{i}/f{j}.bin", blob(8192, i * 64 + j))
+        rng = np.random.default_rng(SEED)
+        t_loop0, env0 = cl.clock.now, cl.router.rpc_count
+        lat: list[float] = []
+        busy = [0.0] * N_TENANTS
+        for r in range(ROUNDS):
+            for i, fs in enumerate(tenants):
+                j = int(rng.integers(FILES_PER_TENANT))
+                ops = [lambda: fs.stat(f"/bench/t{i}/f{j}.bin"),
+                       lambda: fs.listdir(f"/bench/t{i}"),
+                       lambda: fs.listdir("/bench/shared"),
+                       lambda: fs.exists("/bench/shared/manifest.bin")]
+                if r % 3 == 2:
+                    ops.append(lambda: fs.read_file(f"/bench/t{i}/f{j}.bin"))
+                for op in ops:
+                    t0 = cl.clock.now
+                    op()
+                    dt = cl.clock.now - t0
+                    lat.append(dt)
+                    busy[i] += dt
+        makespan = cl.clock.now - t_loop0
+        lease_hits = sum(fs.client.stats.get(k, 0) for fs in tenants for k in
+                         ("lease_attr_hits", "lease_lookup_hits",
+                          "lease_readdir_hits"))
+        return {
+            "tenants": N_TENANTS, "nodes": N_NODES, "rounds": ROUNDS,
+            "meta_ops": len(lat),
+            "makespan_s": round(makespan, 6),
+            "throughput_ops_s": round(len(lat) / max(makespan, 1e-9), 1),
+            "meta_p50_ms": round(pctl(lat, 50) * 1e3, 6),
+            "meta_p99_ms": round(pctl(lat, 99) * 1e3, 6),
+            "rpc_envelopes_total": cl.router.rpc_count,
+            "rpc_envelopes_loop": cl.router.rpc_count - env0,
+            "batched_subcalls": cl.router.batched_subcalls,
+            "lease_hits": lease_hits,
+            "fairness_busy_ratio": round(max(busy) / max(min(busy), 1e-9), 3),
+            "rpc_methods": rpc_summary(cl),
+        }
 
 
 def _hot_dir_cell(lock_mode: str) -> dict:
     """Older tenants create files in one hot directory while younger
     writers keep taking the directory lock between their attempts."""
-    wd = tempfile.mkdtemp(prefix=f"bench-hot-{lock_mode}-")
-    cl = make_cluster(wd, n=3)
-    cl.cfg.lock_mode = lock_mode
-    fs = make_fs(cl)
-    fs.makedirs("/bench/hot")
-    hot = fs.resolve("/bench/hot")
-    srv = cl.servers[cl.any_server().owner(meta_key(hot))]
-    key = meta_key(hot)
-    blocker_seq = [9000]          # far younger than any tenant under wait-die
+    with bench_env(f"bench-hot-{lock_mode}-", n=3) as cl:
+        cl.cfg.lock_mode = lock_mode
+        fs = make_fs(cl)
+        fs.makedirs("/bench/hot")
+        hot = fs.resolve("/bench/hot")
+        srv = cl.servers[cl.any_server().owner(meta_key(hot))]
+        key = meta_key(hot)
+        blocker_seq = [9000]      # far younger than any tenant under wait-die
 
-    def grab():
-        blocker_seq[0] += 1
-        txid_p = {"client_id": 999, "seq": blocker_seq[0], "txseq": 0}
-        res, _ = srv.rpc_prepare(cl.clock.now, txid_p=txid_p,
-                                 cmd_id=int(Cmd.TX_PREPARE_META), ops=[],
-                                 keys=[key])
-        return txid_p if res.get("vote") else None
+        def grab():
+            blocker_seq[0] += 1
+            txid_p = {"client_id": 999, "seq": blocker_seq[0], "txseq": 0}
+            res, _ = srv.rpc_prepare(cl.clock.now, txid_p=txid_p,
+                                     cmd_id=int(Cmd.TX_PREPARE_META), ops=[],
+                                     keys=[key])
+            return txid_p if res.get("vote") else None
 
-    def drop(txid_p):
-        if txid_p is not None:
-            srv.rpc_abort(cl.clock.now, txid_p=txid_p)
+        def drop(txid_p):
+            if txid_p is not None:
+                srv.rpc_abort(cl.clock.now, txid_p=txid_p)
 
-    t0 = cl.clock.now
-    aborts = failures = blocker_holds = blocker_dies = 0
-    for i in range(HOT_TENANTS):
-        done = False
-        for _r in range(HOT_ROUNDS):
-            b = grab()                      # churn: a young writer interposes
-            if b is not None:
-                blocker_holds += 1
-            else:
-                blocker_dies += 1           # wait-die: younger grabber dies
-            try:
-                srv.coord_create(cl.clock.now, client_id=50 + i, seq=i + 1,
-                                 parent=hot, name=f"t{i}.bin",
-                                 kind=int(InodeKind.FILE), cos_bucket="bench",
-                                 cos_key=f"hot/t{i}.bin", mtime=cl.clock.now)
-                drop(b)
-                done = True
-                break
-            except FSError as e:
-                if e.errno != Errno.ECONFLICT:
-                    raise
-                aborts += 1
-                cl.clock.sleep(0.0005)      # the client's retry backoff
-                drop(b)                     # churning writer gives up
-        if not done:
-            try:                            # quiet retry after the churn
-                srv.coord_create(cl.clock.now, client_id=50 + i, seq=i + 1,
-                                 parent=hot, name=f"t{i}.bin",
-                                 kind=int(InodeKind.FILE), cos_bucket="bench",
-                                 cos_key=f"hot/t{i}.bin", mtime=cl.clock.now)
-            except FSError:
-                failures += 1
-    created = len(fs.listdir("/bench/hot"))
-    cell = {
-        "lock_mode": lock_mode, "tenants": HOT_TENANTS,
-        "churn_rounds": HOT_ROUNDS,
-        "econflict_aborts": aborts,
-        "aborts_per_tenant": round(aborts / HOT_TENANTS, 2),
-        "tenant_failures": failures,
-        "created": created,
-        "blocker_holds": blocker_holds,
-        "blocker_dies": blocker_dies,
-        "lock_queued": srv.stats.get("lock_queued", 0),
-        "lock_die": srv.stats.get("lock_die", 0),
-        "makespan_s": round(cl.clock.now - t0, 6),
-    }
-    cl.close()
-    shutil.rmtree(wd, ignore_errors=True)
-    return cell
+        t0 = cl.clock.now
+        aborts = failures = blocker_holds = blocker_dies = 0
+        for i in range(HOT_TENANTS):
+            done = False
+            for _r in range(HOT_ROUNDS):
+                b = grab()                  # churn: a young writer interposes
+                if b is not None:
+                    blocker_holds += 1
+                else:
+                    blocker_dies += 1       # wait-die: younger grabber dies
+                try:
+                    srv.coord_create(cl.clock.now, client_id=50 + i,
+                                     seq=i + 1, parent=hot, name=f"t{i}.bin",
+                                     kind=int(InodeKind.FILE),
+                                     cos_bucket="bench",
+                                     cos_key=f"hot/t{i}.bin",
+                                     mtime=cl.clock.now)
+                    drop(b)
+                    done = True
+                    break
+                except FSError as e:
+                    if e.errno != Errno.ECONFLICT:
+                        raise
+                    aborts += 1
+                    cl.clock.sleep(0.0005)  # the client's retry backoff
+                    drop(b)                 # churning writer gives up
+            if not done:
+                try:                        # quiet retry after the churn
+                    srv.coord_create(cl.clock.now, client_id=50 + i,
+                                     seq=i + 1, parent=hot, name=f"t{i}.bin",
+                                     kind=int(InodeKind.FILE),
+                                     cos_bucket="bench",
+                                     cos_key=f"hot/t{i}.bin",
+                                     mtime=cl.clock.now)
+                except FSError:
+                    failures += 1
+        created = len(fs.listdir("/bench/hot"))
+        return {
+            "lock_mode": lock_mode, "tenants": HOT_TENANTS,
+            "churn_rounds": HOT_ROUNDS,
+            "econflict_aborts": aborts,
+            "aborts_per_tenant": round(aborts / HOT_TENANTS, 2),
+            "tenant_failures": failures,
+            "created": created,
+            "blocker_holds": blocker_holds,
+            "blocker_dies": blocker_dies,
+            "lock_queued": srv.stats.get("lock_queued", 0),
+            "lock_die": srv.stats.get("lock_die", 0),
+            "makespan_s": round(cl.clock.now - t0, 6),
+        }
 
 
 def run(quiet: bool = False) -> dict:

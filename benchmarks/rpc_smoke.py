@@ -13,54 +13,45 @@ envelopes (`Router.rpc_count`, what batching reduces) and typed sub-calls
 
 from __future__ import annotations
 
-import argparse
-import json
-import os
-import shutil
 import sys
-import tempfile
 
-from .common import REPORT_DIR, blob, make_cluster, make_fs, save_report
+from .common import Gate, bench_env, blob, gate_main, make_fs, save_report
 
 N_NODES = 4
 N_DIRS = 4
 FILES_PER_DIR = 16
 PASSES = 3
-REGRESSION_TOLERANCE = 0.20
 
-BASELINE_PATH = os.path.join(REPORT_DIR, "rpc_smoke_baseline.json")
+GATES = [Gate("rpc_envelopes"), Gate("rpc_subcalls")]
 
 
 def run(quiet: bool = False) -> dict:
-    wd = tempfile.mkdtemp(prefix="bench-rpc-smoke-")
-    cl = make_cluster(wd, n=N_NODES)
-    fs = make_fs(cl)
-    for d in range(N_DIRS):
-        fs.makedirs(f"/bench/d{d}")
-        for i in range(FILES_PER_DIR):
-            fs.write_file(f"/bench/d{d}/f{i}.bin", blob(8192, d * 64 + i))
-    for _ in range(PASSES):
+    with bench_env("bench-rpc-smoke-", n=N_NODES) as cl:
+        fs = make_fs(cl)
         for d in range(N_DIRS):
-            fs.listdir(f"/bench/d{d}")
+            fs.makedirs(f"/bench/d{d}")
             for i in range(FILES_PER_DIR):
-                fs.stat(f"/bench/d{d}/f{i}.bin")
-    for d in range(N_DIRS):
-        for i in range(FILES_PER_DIR):
-            fs.read_file(f"/bench/d{d}/f{i}.bin")
-    subcalls = sum(v["calls"] for v in cl.rpc_stats().values())
-    rep = {
-        "nodes": N_NODES, "dirs": N_DIRS, "files": N_DIRS * FILES_PER_DIR,
-        "passes": PASSES,
-        "rpc_envelopes": cl.router.rpc_count,
-        "rpc_subcalls": int(subcalls),
-        "batched_subcalls": cl.router.batched_subcalls,
-        "lease_hits": sum(fs.client.stats.get(k, 0) for k in
-                          ("lease_attr_hits", "lease_lookup_hits",
-                           "lease_readdir_hits")),
-        "virtual_s": round(cl.clock.now, 6),
-    }
-    cl.close()
-    shutil.rmtree(wd, ignore_errors=True)
+                fs.write_file(f"/bench/d{d}/f{i}.bin", blob(8192, d * 64 + i))
+        for _ in range(PASSES):
+            for d in range(N_DIRS):
+                fs.listdir(f"/bench/d{d}")
+                for i in range(FILES_PER_DIR):
+                    fs.stat(f"/bench/d{d}/f{i}.bin")
+        for d in range(N_DIRS):
+            for i in range(FILES_PER_DIR):
+                fs.read_file(f"/bench/d{d}/f{i}.bin")
+        subcalls = sum(v["calls"] for v in cl.rpc_stats().values())
+        rep = {
+            "nodes": N_NODES, "dirs": N_DIRS, "files": N_DIRS * FILES_PER_DIR,
+            "passes": PASSES,
+            "rpc_envelopes": cl.router.rpc_count,
+            "rpc_subcalls": int(subcalls),
+            "batched_subcalls": cl.router.batched_subcalls,
+            "lease_hits": sum(fs.client.stats.get(k, 0) for k in
+                              ("lease_attr_hits", "lease_lookup_hits",
+                               "lease_readdir_hits")),
+            "virtual_s": round(cl.clock.now, 6),
+        }
     save_report("rpc_smoke", rep)
     if not quiet:
         print(f"[rpc-smoke] {rep['rpc_envelopes']} envelopes / "
@@ -70,50 +61,10 @@ def run(quiet: bool = False) -> dict:
     return rep
 
 
-def check(rep: dict) -> int:
-    if not os.path.exists(BASELINE_PATH):
-        print(f"[rpc-smoke] no baseline at {BASELINE_PATH}; "
-              "run --update-baseline first", file=sys.stderr)
-        return 1
-    with open(BASELINE_PATH) as f:
-        base = json.load(f)
-    rc = 0
-    for metric in ("rpc_envelopes", "rpc_subcalls"):
-        limit = base[metric] * (1.0 + REGRESSION_TOLERANCE)
-        if rep[metric] > limit:
-            print(f"[rpc-smoke] REGRESSION: {metric} {rep[metric]} > "
-                  f"{limit:.0f} (baseline {base[metric]} "
-                  f"+{REGRESSION_TOLERANCE:.0%})", file=sys.stderr)
-            rc = 1
-    if rc == 0:
-        print(f"[rpc-smoke] OK: {rep['rpc_envelopes']} envelopes / "
-              f"{rep['rpc_subcalls']} sub-calls within "
-              f"{REGRESSION_TOLERANCE:.0%} of baseline "
-              f"({base['rpc_envelopes']} / {base['rpc_subcalls']})")
-    return rc
-
-
 def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--check", action="store_true",
-                    help="exit 1 if RPC counts regress >20%% vs baseline")
-    ap.add_argument("--update-baseline", action="store_true",
-                    help="record current RPC counts as the baseline")
-    args = ap.parse_args()
-    rep = run()
-    if args.update_baseline:
-        os.makedirs(REPORT_DIR, exist_ok=True)
-        with open(BASELINE_PATH, "w") as f:
-            json.dump({"nodes": rep["nodes"], "files": rep["files"],
-                       "passes": rep["passes"],
-                       "rpc_envelopes": rep["rpc_envelopes"],
-                       "rpc_subcalls": rep["rpc_subcalls"]}, f, indent=1)
-        print(f"[rpc-smoke] baseline updated: {rep['rpc_envelopes']} "
-              f"envelopes / {rep['rpc_subcalls']} sub-calls")
-        return 0
-    if args.check:
-        return check(rep)
-    return 0
+    return gate_main("rpc-smoke", run, "rpc_smoke_baseline.json", GATES,
+                     baseline_keys=["nodes", "files", "passes",
+                                    "rpc_envelopes", "rpc_subcalls"])
 
 
 if __name__ == "__main__":

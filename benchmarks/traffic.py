@@ -1,0 +1,179 @@
+"""Open-loop multi-tenant traffic sweep with and without QoS admission.
+
+The closed-loop benchmarks (`multi_tenant.py`, the Fig-9 reproductions)
+cannot show queueing collapse: a slow cluster throttles its own offered
+load.  This sweep drives the cluster *open-loop* (`repro.core.loadgen`) at
+fixed offered rates spanning the capacity knee, with three tenants:
+
+* `gold`   — contracted interactive class, steady Poisson arrivals;
+* `silver` — bursty ON/OFF batch class;
+* `best`   — best-effort bulk class offering half the total load.
+
+Each load point runs twice on a fresh cluster: `no_admission` (the fabric
+accepts everything — p999 diverges past the knee and every tenant collapses
+together) and `admission` (per-tenant token buckets at the Router shed
+best-effort overload — gold's p99 stays bounded while shed rate absorbs the
+excess).  Results land in `reports/bench/traffic.json` with `knee` and
+`qos` summary sections.
+
+    PYTHONPATH=src python -m benchmarks.traffic
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.core import (OnOffArrivals, OpenLoopRunner, PoissonArrivals,
+                        ServerConfig, TenantSpec, build_schedule,
+                        default_qos_policy, loadtest_hw, summarize)
+
+from .common import bench_env, make_fs, rpc_summary, save_report
+
+N_NODES = 4
+CHUNK = 64 * 1024
+HORIZON_S = 2.0
+SEED = 20260808
+N_DIRS = 8
+FILES_PER_DIR = 16
+FILE_BYTES = 8192
+
+# Offered-load sweep (total fs-ops/s across tenants).  loadtest_hw() puts
+# the capacity knee near ~700 ops/s on 4 nodes: the first two points are
+# healthy, 800 queues, 1600 is 2x overload (collapse without admission).
+LOAD_POINTS = [200, 400, 800, 1600]
+CAPACITY_OPS_S = 600          # admission policy sizing (see default_qos_policy)
+
+# tenant shares of the total offered load
+GOLD_SHARE, SILVER_SHARE, BEST_SHARE = 0.25, 0.25, 0.50
+# ON/OFF duty cycle: mean rate = on_rate * on / (on + off)
+ON_S, OFF_S = 0.2, 0.3
+GOLD_P99_BUDGET_MS = 120.0    # the SLO the qos section checks at 2x overload
+
+
+def make_tenants(total_ops_s: float) -> list[TenantSpec]:
+    duty = ON_S / (ON_S + OFF_S)
+    return [
+        TenantSpec("gold", PoissonArrivals(GOLD_SHARE * total_ops_s),
+                   n_clients=512, qos_class="gold"),
+        TenantSpec("silver",
+                   OnOffArrivals(SILVER_SHARE * total_ops_s / duty,
+                                 mean_on_s=ON_S, mean_off_s=OFF_S),
+                   n_clients=512, qos_class="silver"),
+        TenantSpec("best", PoissonArrivals(BEST_SHARE * total_ops_s),
+                   n_clients=1024, qos_class="best"),
+    ]
+
+
+def build_catalog(cl) -> tuple[list[str], list[str]]:
+    # fixed boot id: keeps virtual timing identical across the sweep's
+    # cells regardless of the process-global client-id counter
+    fs = make_fs(cl, consistency="strict", client_id=9001)
+    for t in ("gold", "silver", "best"):
+        fs.makedirs(f"/bench/{t}")
+    dirs, files = [], []
+    for d in range(N_DIRS):
+        dp = f"/data{d}"
+        fs.mkdir(dp)
+        dirs.append(dp)
+        for i in range(FILES_PER_DIR):
+            p = f"{dp}/f{i}.bin"
+            fs.write_file(p, bytes(FILE_BYTES))
+            files.append(p)
+    return files, dirs
+
+
+def run_point(total_ops_s: float, admission: bool, *, nodes: int = N_NODES,
+              horizon_s: float = HORIZON_S, seed: int = SEED,
+              capacity_ops_s: float = CAPACITY_OPS_S,
+              pool_per_tenant: int = 16) -> dict:
+    mode = "admission" if admission else "no_admission"
+    with bench_env(f"bench-traffic-{mode}-", n=nodes, chunk=CHUNK,
+                   hw=loadtest_hw(),
+                   cfg=ServerConfig(chunk_size=CHUNK)) as cl:
+        files, dirs = build_catalog(cl)
+        tenants = make_tenants(total_ops_s)
+        sched = build_schedule(tenants, files, dirs, horizon_s=horizon_s,
+                               seed=seed)
+        if admission:
+            cl.router.set_admission(default_qos_policy(capacity_ops_s))
+        runner = OpenLoopRunner(cl, tenants, consistency="strict",
+                                pool_per_tenant=pool_per_tenant)
+        results = runner.run(sched)
+        cell = summarize(results, horizon_s)
+        cell["tenant_stats"] = {
+            t: {k: round(v, 6) for k, v in st.items()}
+            for t, st in sorted(cl.router.tenant_stats.items())}
+        cell["rpc_envelopes"] = cl.router.rpc_count
+        cell["rpc_methods"] = rpc_summary(cl, top=5)
+        return cell
+
+
+def run(quiet: bool = False) -> dict:
+    rep: dict = {
+        "nodes": N_NODES, "horizon_s": HORIZON_S, "seed": SEED,
+        "capacity_ops_s": CAPACITY_OPS_S,
+        "load_points_ops_s": LOAD_POINTS,
+        "tenant_shares": {"gold": GOLD_SHARE, "silver": SILVER_SHARE,
+                          "best": BEST_SHARE},
+        "sweep": [],
+    }
+    for total in LOAD_POINTS:
+        point = {"offered_ops_s": total,
+                 "no_admission": run_point(total, admission=False),
+                 "admission": run_point(total, admission=True)}
+        rep["sweep"].append(point)
+        if not quiet:
+            na, ad = point["no_admission"], point["admission"]
+            print(f"[traffic] {total:5d} ops/s: "
+                  f"no-adm p99={na['overall']['p99_ms']:9.3f}ms "
+                  f"p999={na['overall']['p999_ms']:9.3f}ms | "
+                  f"adm gold p99={ad['tenants']['gold']['p99_ms']:8.3f}ms "
+                  f"best shed={ad['tenants']['best']['shed_rate']:.0%}")
+
+    # knee: the load point where open-loop p999 diverges (queueing delay
+    # comparable to the whole horizon) without admission
+    base = rep["sweep"][0]["no_admission"]["overall"]["p999_ms"]
+    knee = None
+    for point in rep["sweep"]:
+        if point["no_admission"]["overall"]["p999_ms"] > max(10 * base, 100):
+            knee = point["offered_ops_s"]
+            break
+    rep["knee"] = {
+        "baseline_p999_ms": base,
+        "diverges_at_ops_s": knee,
+        "p999_by_load_ms": {str(p["offered_ops_s"]):
+                            p["no_admission"]["overall"]["p999_ms"]
+                            for p in rep["sweep"]},
+    }
+
+    # qos: at the heaviest point (2x overload), admission must keep the
+    # contracted class inside its latency budget by shedding best-effort
+    last = rep["sweep"][-1]
+    gold_adm = last["admission"]["tenants"]["gold"]
+    gold_na = last["no_admission"]["tenants"]["gold"]
+    best_adm = last["admission"]["tenants"]["best"]
+    rep["qos"] = {
+        "overload_ops_s": last["offered_ops_s"],
+        "gold_p99_budget_ms": GOLD_P99_BUDGET_MS,
+        "gold_p99_no_admission_ms": gold_na["p99_ms"],
+        "gold_p99_admission_ms": gold_adm["p99_ms"],
+        "gold_within_budget": gold_adm["p99_ms"] <= GOLD_P99_BUDGET_MS,
+        "gold_shed_rate": gold_adm["shed_rate"],
+        "best_shed_rate": best_adm["shed_rate"],
+        "jain_no_admission": last["no_admission"]["jain_fairness"],
+        "jain_admission": last["admission"]["jain_fairness"],
+    }
+    save_report("traffic", rep)
+    if not quiet:
+        q = rep["qos"]
+        print(f"[traffic] knee at {rep['knee']['diverges_at_ops_s']} ops/s; "
+              f"at {q['overload_ops_s']} ops/s gold p99 "
+              f"{q['gold_p99_no_admission_ms']:.1f} -> "
+              f"{q['gold_p99_admission_ms']:.1f} ms "
+              f"(budget {q['gold_p99_budget_ms']:.0f}), "
+              f"best shed {q['best_shed_rate']:.0%}")
+    return rep
+
+
+if __name__ == "__main__":
+    sys.exit(0 if run() else 1)

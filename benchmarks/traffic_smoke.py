@@ -1,0 +1,86 @@
+"""Traffic/QoS smoke: two open-loop load points vs a checked-in baseline.
+
+Run by `scripts/check.sh` as a regression gate for the open-loop harness and
+the Router's admission control (mirroring rpc_smoke / flush_smoke):
+
+* `low`      — 300 ops/s, no admission, 3 nodes: the healthy-regime p99
+  must not regress (this is the raw fabric + strict-client service path);
+* `overload` — 1400 ops/s (well past the 3-node knee) *with* the reference
+  QoS policy: the contracted gold tenant's p99 must stay bounded and its
+  shed rate zero, while the best-effort shed rate must not creep up.
+
+    PYTHONPATH=src python -m benchmarks.traffic_smoke --check
+    PYTHONPATH=src python -m benchmarks.traffic_smoke --update-baseline
+"""
+
+from __future__ import annotations
+
+import sys
+
+from .common import Gate, gate_main, save_report
+from .traffic import run_point
+
+N_NODES = 3
+HORIZON_S = 1.0
+SEED = 31337
+LOW_OPS_S = 300
+OVERLOAD_OPS_S = 1200
+# 3 nodes (the big sweep's 600 is for 4).  Gold's contracted rate must
+# clear its overload-point offer (0.25 * 1200 = 300 ops/s < 0.75 * 500 *
+# env_per_op), or the smoke's own policy sheds the class it gates on.
+CAPACITY_OPS_S = 500
+
+GATES = [
+    Gate("low.p99_ms", tolerance=0.25, slack=2.0),
+    Gate("overload.gold_p99_ms", tolerance=0.25, slack=5.0),
+    # gold must never be shed: baseline is 0.0, so the gate is pure slack
+    Gate("overload.gold_shed_rate", tolerance=0.0, slack=0.005),
+    # best-effort shed absorbs the overload; creep means the policy (or the
+    # fabric's envelope accounting) changed under it
+    Gate("overload.best_shed_rate", tolerance=0.10, slack=0.05),
+]
+
+
+def run(quiet: bool = False) -> dict:
+    low = run_point(LOW_OPS_S, admission=False, nodes=N_NODES,
+                    horizon_s=HORIZON_S, seed=SEED,
+                    capacity_ops_s=CAPACITY_OPS_S, pool_per_tenant=8)
+    over = run_point(OVERLOAD_OPS_S, admission=True, nodes=N_NODES,
+                     horizon_s=HORIZON_S, seed=SEED,
+                     capacity_ops_s=CAPACITY_OPS_S, pool_per_tenant=8)
+    rep = {
+        "nodes": N_NODES, "horizon_s": HORIZON_S, "seed": SEED,
+        "low": {
+            "offered_ops_s": LOW_OPS_S,
+            "p99_ms": low["overall"]["p99_ms"],
+            "p999_ms": low["overall"]["p999_ms"],
+            "shed_rate": low["overall"]["shed_rate"],
+        },
+        "overload": {
+            "offered_ops_s": OVERLOAD_OPS_S,
+            "gold_p99_ms": over["tenants"]["gold"]["p99_ms"],
+            "gold_shed_rate": over["tenants"]["gold"]["shed_rate"],
+            "best_shed_rate": over["tenants"]["best"]["shed_rate"],
+            "jain_fairness": over["jain_fairness"],
+        },
+    }
+    save_report("traffic_smoke", rep)
+    if not quiet:
+        print(f"[traffic-smoke] low p99={rep['low']['p99_ms']:.3f}ms; "
+              f"overload gold p99={rep['overload']['gold_p99_ms']:.3f}ms "
+              f"(shed {rep['overload']['gold_shed_rate']:.1%}), "
+              f"best shed {rep['overload']['best_shed_rate']:.0%}")
+    return rep
+
+
+def main() -> int:
+    return gate_main("traffic-smoke", run, "traffic_smoke_baseline.json",
+                     GATES,
+                     baseline_keys=["nodes", "horizon_s",
+                                    "low.p99_ms", "overload.gold_p99_ms",
+                                    "overload.gold_shed_rate",
+                                    "overload.best_shed_rate"])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,3 +20,8 @@ echo "== rpc-count smoke =="
 # fixed metadata+data workload; fails if RPC envelopes or typed sub-calls
 # grow >20% vs reports/bench/rpc_smoke_baseline.json (metadata fast paths)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.rpc_smoke --check
+
+echo "== traffic-qos smoke =="
+# open-loop low-load + 2x-overload points; fails if tail latency, gold shed
+# rate, or best-effort shed rate regress vs traffic_smoke_baseline.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.traffic_smoke --check

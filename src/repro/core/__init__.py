@@ -18,25 +18,33 @@ from .cos import CosError, CosStore
 from .flusher import BackgroundFlusher
 from .fs import ObjcacheFS
 from .hashring import HashRing
+from .loadgen import (OnOffArrivals, OpEvent, OpenLoopRunner, PoissonArrivals,
+                      Schedule, TenantSpec, TraceArrivals, build_schedule,
+                      default_qos_policy, fs_fingerprint, jain_index,
+                      loadtest_hw, summarize)
 from .migration import Migrator
-from .net import (Router, RpcSpec, SimCrash, SimTimeout, UnknownRpcError,
-                  rpc_handler)
+from .net import (AdmissionControl, Router, RpcSpec, SimCrash, SimTimeout,
+                  TenantQos, UnknownRpcError, rpc_handler)
 from .participant import Participant
 from .persist import Persister
 from .raftlog import ChecksumError, RaftLog
 from .server import BucketMount, CacheServer, NODELIST_KEY, ServerConfig
 from .simclock import HardwareModel, InflightWindow, Resource, SimClock
 from .state import ServerState
-from .types import (CHUNK_SIZE_DEFAULT, Cmd, Errno, FSError, InodeKind,
-                    InodeMeta, ROOT_INODE, TxId)
+from .types import (AdmissionError, CHUNK_SIZE_DEFAULT, Cmd, Errno, FSError,
+                    InodeKind, InodeMeta, ROOT_INODE, TxId)
 
 __all__ = [
-    "BackgroundFlusher", "BucketMount", "CHUNK_SIZE_DEFAULT", "CacheServer",
-    "ChecksumError", "ClientConfig", "Cluster", "Cmd", "Coordinator",
-    "CosError", "CosStore", "Errno", "FSError", "HardwareModel", "HashRing",
-    "InflightWindow", "InodeKind", "InodeMeta", "Migrator", "NODELIST_KEY",
-    "ObjcacheClient", "ObjcacheFS", "Participant", "Persister", "ROOT_INODE",
-    "Resource", "Router", "RaftLog", "RpcSpec", "ScaleStats", "ServerConfig",
-    "ServerState", "SimClock", "SimCrash", "SimTimeout", "TxId",
-    "UnknownRpcError", "rpc_handler",
+    "AdmissionControl", "AdmissionError", "BackgroundFlusher", "BucketMount",
+    "CHUNK_SIZE_DEFAULT", "CacheServer", "ChecksumError", "ClientConfig",
+    "Cluster", "Cmd", "Coordinator", "CosError", "CosStore", "Errno",
+    "FSError", "HardwareModel", "HashRing", "InflightWindow", "InodeKind",
+    "InodeMeta", "Migrator", "NODELIST_KEY", "ObjcacheClient", "ObjcacheFS",
+    "OnOffArrivals", "OpEvent", "OpenLoopRunner", "Participant", "Persister",
+    "PoissonArrivals", "ROOT_INODE", "Resource", "Router", "RaftLog",
+    "RpcSpec", "ScaleStats", "Schedule", "ServerConfig", "ServerState",
+    "SimClock", "SimCrash", "SimTimeout", "TenantQos", "TenantSpec",
+    "TraceArrivals", "TxId", "UnknownRpcError", "build_schedule",
+    "default_qos_policy", "fs_fingerprint", "jain_index", "loadtest_hw",
+    "rpc_handler", "summarize",
 ]

@@ -39,6 +39,10 @@ _client_ids = itertools.count(1)
 class ClientConfig:
     consistency: str = "weak"          # "strict" | "weak"  (§3.3)
     deployment: str = "detached"       # "detached" | "embedded"  (§3.1)
+    # QoS tenant tag carried on every data/metadata envelope this client
+    # sends; None = untagged (never policed).  Control-plane traffic (the
+    # node-list pull) stays untagged so a shed tenant can still re-route.
+    tenant: str | None = None
     page_cache_bytes: int = 1 << 30
     write_buffer_bytes: int = 128 * 1024   # §6.2: Linux allowed up to 128 KB
     readahead_chunks: int = 4          # chunks prefetched ahead on seq reads
@@ -73,13 +77,17 @@ class _Handle:
 class ObjcacheClient:
     def __init__(self, router: Router, clock: SimClock, local_node: str,
                  cfg: ClientConfig | None = None,
-                 chunk_size: int = 16 * 1024 * 1024) -> None:
+                 chunk_size: int = 16 * 1024 * 1024,
+                 client_id: int | None = None) -> None:
         self.router = router
         self.clock = clock
         self.local_node = local_node
         self.cfg = cfg or ClientConfig()
         self.chunk_size = chunk_size
-        self.client_id = next(_client_ids)
+        # explicit ids let reproducibility-sensitive callers (the open-loop
+        # runner) avoid the process-global counter: the id's decimal width
+        # leaks into staged-part keys and therefore payload bytes / timing
+        self.client_id = next(_client_ids) if client_id is None else client_id
         self._seq = 0
         self.node_list: list[str] = []
         self.nl_version = 0
@@ -99,13 +107,13 @@ class ObjcacheClient:
         # getattrs locally with zero RPCs; renewals carry the epoch so any
         # committed mutation at the owner invalidates the lease (ESTALE)
         self._leases: dict[int, dict] = {}
-        self.stats: dict[str, int] = {}
+        self.stats: dict[str, float] = {}
         self._pull_node_list()
 
     # =====================================================================
     # plumbing
     # =====================================================================
-    def _bump(self, k: str, n: int = 1) -> None:
+    def _bump(self, k: str, n: float = 1) -> None:
         self.stats[k] = self.stats.get(k, 0) + n
 
     def next_seq(self) -> int:
@@ -140,7 +148,8 @@ class ObjcacheClient:
                 res, t = self.router.rpc(
                     self.local_node, dst, method, self.clock.now,
                     nbytes_out=nbytes_out, nbytes_in=nbytes_in,
-                    embedded_local=self._is_embedded(dst), **kw)
+                    embedded_local=self._is_embedded(dst),
+                    tenant=self.cfg.tenant, **kw)
                 self.clock.advance_to(t)
                 return res
             except StaleLeaseError as e:
@@ -490,6 +499,7 @@ class ObjcacheClient:
         ends = []
         bp_delay = 0.0
         t0 = self.clock.now
+        adm0 = self.router.tenant_delay_s(self.cfg.tenant)
         while pos < len(data):
             abs_off = off + pos
             coff = (abs_off // cs) * cs
@@ -502,6 +512,7 @@ class ObjcacheClient:
                 self.local_node, owner, "rpc_stage_write", t0,
                 nbytes_out=n + 256,
                 embedded_local=self._is_embedded(owner),
+                tenant=self.cfg.tenant,
                 ino=ino, chunk_off=coff, off=in_off,
                 data=data[pos:pos + n], stage_id=stage_id,
                 nl_version=self.nl_version)
@@ -514,9 +525,16 @@ class ObjcacheClient:
             self.clock.advance_to(max(ends))
         if bp_delay > 0.0:
             # dirty-page backpressure (§5.2): the cluster is above its dirty
-            # high-watermark — stall this writer so the flusher can drain
-            self.clock.sleep(bp_delay)
-            self._bump("bp_stalls")
+            # high-watermark — stall this writer so the flusher can drain.
+            # QoS admission may already have delayed this op's staging
+            # envelopes; the two throttles compose (only the remainder of
+            # the hint stalls) instead of double-counting the same slowdown.
+            adm = self.router.tenant_delay_s(self.cfg.tenant) - adm0
+            eff = max(0.0, bp_delay - adm)
+            if eff > 0.0:
+                self.clock.sleep(eff)
+                self._bump("bp_stalls")
+                self._bump("bp_stall_s", eff)
         self._bump("write_bytes", len(data))
         return [(c, ids) for c, ids in sorted(staged.items())]
 
@@ -582,6 +600,7 @@ class ObjcacheClient:
                 self.local_node, owner, "rpc_read_chunk", t0,
                 nbytes_in=want + 256,
                 embedded_local=self._is_embedded(owner),
+                tenant=self.cfg.tenant,
                 ino=ino, chunk_off=coff, off=0, length=want,
                 cos_bucket=meta.get("cos_bucket"),
                 cos_key=meta.get("cos_key"), file_size=size,

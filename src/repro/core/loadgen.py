@@ -1,0 +1,436 @@
+"""Open-loop multi-tenant traffic generation over the sim clock.
+
+Every benchmark before this module drove the cluster *closed-loop*: each
+client issues its next operation only after the previous one returns, so a
+slow server silently throttles its own offered load and queueing collapse
+never shows up in the numbers (the paper's Figs. 9/13-14 and the old
+16-client `multi_tenant.json` all have this blind spot).  This module
+generates *open-loop* traffic: arrivals are scheduled by a stochastic
+process up front, and every operation starts at its scheduled time whether
+or not earlier operations have finished.  `SimClock.at` rewinds the shared
+clock to each arrival; the `Resource` lanes keep their own ``free_at``
+bookkeeping, so at overload the queueing delay compounds exactly as a real
+open system's would and p999 diverges at the knee.
+
+Pieces:
+
+* arrival processes — `PoissonArrivals`, `OnOffArrivals` (bursty ON/OFF with
+  exponential phase lengths), `TraceArrivals` (replay a recorded timeline);
+* `TenantSpec` — per-tenant arrival process, virtual-client population, op
+  mix, and Zipf popularity exponent;
+* `build_schedule` — deterministic (seeded) merge of per-tenant event
+  streams into a single time-ordered `Schedule`; serializable through
+  `Schedule.to_payload` / `from_payload` (the trace format — a schedule can
+  be saved, diffed, and replayed bit-for-bit);
+* `OpenLoopRunner` — executes a schedule against a cluster through a bounded
+  pool of real `ObjcacheFS` clients per tenant (thousands of *virtual*
+  clients map onto the pool, like FUSE processes shared per node); shed
+  operations (`AdmissionError` from the router's token buckets) are
+  recorded, never retried — open-loop load does not self-throttle;
+* `summarize` — p50/p99/p999 latency, goodput, shed rate, and Jain's
+  fairness index per tenant and overall;
+* `fs_fingerprint` — end-state digest (namespace + sizes + content hashes)
+  for deterministic-replay and metamorphic tests.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .client import ClientConfig, ObjcacheClient
+from .fs import ObjcacheFS
+from .net import SimCrash, SimTimeout, TenantQos
+from .simclock import HardwareModel
+from .types import AdmissionError, FSError, InodeKind
+
+OPS = ("stat", "listdir", "read", "write", "create")
+
+
+# =========================================================================
+# arrival processes
+# =========================================================================
+class ArrivalProcess:
+    """Yields arrival offsets in [0, horizon) given a seeded generator."""
+
+    def times(self, horizon_s: float, rng: np.random.Generator) -> list[float]:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class PoissonArrivals(ArrivalProcess):
+    """Memoryless arrivals at `rate_ops_s` (exponential inter-arrival)."""
+
+    rate_ops_s: float
+
+    def times(self, horizon_s: float, rng: np.random.Generator) -> list[float]:
+        out: list[float] = []
+        t = float(rng.exponential(1.0 / self.rate_ops_s))
+        while t < horizon_s:
+            out.append(t)
+            t += float(rng.exponential(1.0 / self.rate_ops_s))
+        return out
+
+
+@dataclass(frozen=True)
+class OnOffArrivals(ArrivalProcess):
+    """Bursty ON/OFF source: Poisson at `on_rate_ops_s` during ON phases,
+    silent during OFF; phase lengths are exponential with the given means.
+    Mean rate = on_rate * mean_on / (mean_on + mean_off), but the bursts
+    hit the fabric at the full ON rate — the tail-latency stressor."""
+
+    on_rate_ops_s: float
+    mean_on_s: float = 0.2
+    mean_off_s: float = 0.3
+
+    def times(self, horizon_s: float, rng: np.random.Generator) -> list[float]:
+        out: list[float] = []
+        t = 0.0
+        on = True
+        while t < horizon_s:
+            phase = float(rng.exponential(
+                self.mean_on_s if on else self.mean_off_s))
+            if on:
+                tt = t + float(rng.exponential(1.0 / self.on_rate_ops_s))
+                while tt < min(t + phase, horizon_s):
+                    out.append(tt)
+                    tt += float(rng.exponential(1.0 / self.on_rate_ops_s))
+            t += phase
+            on = not on
+        return out
+
+
+@dataclass(frozen=True)
+class TraceArrivals(ArrivalProcess):
+    """Replay a recorded arrival timeline (offsets from t=0)."""
+
+    offsets: tuple[float, ...]
+
+    def times(self, horizon_s: float, rng: np.random.Generator) -> list[float]:
+        return [t for t in self.offsets if 0.0 <= t < horizon_s]
+
+
+# =========================================================================
+# tenants and schedules
+# =========================================================================
+@dataclass
+class TenantSpec:
+    """One tenant's traffic shape.  `n_clients` is the *virtual* client
+    population (arrival attribution + per-client identity); the runner maps
+    them onto a bounded pool of real clients.  `op_mix` weights over OPS;
+    `zipf_s` is the popularity exponent over the shared file/dir catalog
+    (1.0–1.3 is the heavy-tailed regime seen in production file traces)."""
+
+    name: str
+    arrivals: ArrivalProcess
+    n_clients: int = 256
+    op_mix: dict[str, float] = field(default_factory=lambda: {
+        "stat": 0.40, "listdir": 0.10, "read": 0.30, "write": 0.15,
+        "create": 0.05})
+    zipf_s: float = 1.1
+    write_bytes: int = 8192
+    # QoS class carried into benchmark reports / admission policies; the
+    # loadgen itself does not interpret it
+    qos_class: str = "standard"
+
+
+@dataclass(frozen=True)
+class OpEvent:
+    t: float        # absolute arrival time on the sim clock
+    tenant: str
+    vclient: int    # virtual client index within the tenant
+    op: str         # one of OPS
+    path: str
+    size: int = 0   # payload bytes for write/create
+
+    def to_row(self) -> list:
+        # raw float: JSON round-trips doubles exactly, and the trace format
+        # must replay bit-for-bit
+        return [self.t, self.tenant, self.vclient, self.op,
+                self.path, self.size]
+
+    @staticmethod
+    def from_row(row: list) -> "OpEvent":
+        return OpEvent(t=float(row[0]), tenant=row[1], vclient=int(row[2]),
+                       op=row[3], path=row[4], size=int(row[5]))
+
+
+@dataclass
+class Schedule:
+    """A fully materialized open-loop trace: time-ordered events plus the
+    provenance needed to reproduce it.  `to_payload`/`from_payload` is the
+    trace format — plain JSON-compatible rows, replayable bit-for-bit."""
+
+    horizon_s: float
+    seed: int
+    events: list[OpEvent]
+
+    def offered(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for ev in self.events:
+            out[ev.tenant] = out.get(ev.tenant, 0) + 1
+        return out
+
+    def to_payload(self) -> dict:
+        return {"horizon_s": self.horizon_s, "seed": self.seed,
+                "events": [ev.to_row() for ev in self.events]}
+
+    @staticmethod
+    def from_payload(p: dict) -> "Schedule":
+        return Schedule(horizon_s=float(p["horizon_s"]), seed=int(p["seed"]),
+                        events=[OpEvent.from_row(r) for r in p["events"]])
+
+
+def zipf_weights(n: int, s: float) -> np.ndarray:
+    w = 1.0 / np.arange(1, n + 1, dtype=float) ** s
+    return w / w.sum()
+
+
+def build_schedule(tenants: list[TenantSpec], files: list[str],
+                   dirs: list[str], horizon_s: float, seed: int) -> Schedule:
+    """Deterministic schedule: same (tenants, catalog, horizon, seed) ⇒
+    identical event list.  Each tenant draws from its own `(seed, index)`
+    substream, so adding a tenant never perturbs the others' traffic.
+    Create targets land under `/bench/<tenant>/` (pre-created by the
+    caller); everything else draws Zipf-popular paths from the catalog."""
+    assert files and dirs, "catalog must be populated before scheduling"
+    events: list[tuple[float, int, int, OpEvent]] = []
+    for ti, spec in enumerate(tenants):
+        rng = np.random.default_rng([seed, ti])
+        times = spec.arrivals.times(horizon_s, rng)
+        names = [op for op in OPS if spec.op_mix.get(op, 0.0) > 0.0]
+        probs = np.array([spec.op_mix[op] for op in names], dtype=float)
+        probs /= probs.sum()
+        wf = zipf_weights(len(files), spec.zipf_s)
+        wd = zipf_weights(len(dirs), spec.zipf_s)
+        # popularity rank -> catalog index: a tenant-specific permutation so
+        # tenants do not all hammer the same head-of-catalog files
+        pf = rng.permutation(len(files))
+        pd = rng.permutation(len(dirs))
+        created = 0
+        for k, t in enumerate(times):
+            vclient = int(rng.integers(spec.n_clients))
+            op = names[int(rng.choice(len(names), p=probs))]
+            size = 0
+            if op == "listdir":
+                path = dirs[pd[int(rng.choice(len(dirs), p=wd))]]
+            elif op == "create":
+                path = f"/bench/{spec.name}/c{created}.bin"
+                created += 1
+                size = spec.write_bytes
+            else:
+                path = files[pf[int(rng.choice(len(files), p=wf))]]
+                if op == "write":
+                    size = spec.write_bytes
+            events.append((t, ti, k, OpEvent(t=t, tenant=spec.name,
+                                             vclient=vclient, op=op,
+                                             path=path, size=size)))
+    events.sort(key=lambda e: (e[0], e[1], e[2]))
+    return Schedule(horizon_s=horizon_s, seed=seed,
+                    events=[e[3] for e in events])
+
+
+# =========================================================================
+# execution
+# =========================================================================
+@dataclass
+class OpResult:
+    ev: OpEvent
+    status: str          # "ok" | "shed" | "err"
+    latency_s: float
+    errno: int = 0
+
+
+class OpenLoopRunner:
+    """Executes a `Schedule` against a cluster.  Each tenant gets a bounded
+    pool of real clients spread round-robin across the nodes; virtual client
+    `v` uses pool slot `v % pool`.  Operations run at their scheduled
+    arrival time (`SimClock.at`), and per-op latency is completion minus
+    arrival — including any admission delay and resource queueing."""
+
+    def __init__(self, cluster, tenants: list[TenantSpec], *,
+                 consistency: str = "strict", pool_per_tenant: int = 8,
+                 deployment: str = "detached") -> None:
+        self.cluster = cluster
+        self.clock = cluster.clock
+        self.pools: dict[str, list[ObjcacheFS]] = {}
+        nodes = cluster.node_list()
+        # deterministic client ids, allocated from a per-cluster counter:
+        # the process-global id counter would leak each run's position in
+        # the process into staged-part key widths and hence virtual timing,
+        # breaking same-seed reproducibility across clusters
+        cid = getattr(cluster, "_loadgen_next_cid", 10_000)
+        for spec in tenants:
+            pool = []
+            for i in range(min(pool_per_tenant, max(1, spec.n_clients))):
+                client = ObjcacheClient(
+                    cluster.router, cluster.clock, nodes[i % len(nodes)],
+                    ClientConfig(consistency=consistency,
+                                 deployment=deployment, tenant=spec.name),
+                    chunk_size=cluster.cfg.chunk_size, client_id=cid)
+                cid += 1
+                pool.append(ObjcacheFS(client))
+            self.pools[spec.name] = pool
+        cluster._loadgen_next_cid = cid
+
+    def fs_for(self, tenant: str, vclient: int) -> ObjcacheFS:
+        pool = self.pools[tenant]
+        return pool[vclient % len(pool)]
+
+    def _exec(self, fs: ObjcacheFS, ev: OpEvent) -> None:
+        if ev.op == "stat":
+            fs.stat(ev.path)
+        elif ev.op == "listdir":
+            fs.listdir(ev.path)
+        elif ev.op == "read":
+            fs.read_file(ev.path)
+        elif ev.op in ("write", "create"):
+            fs.write_file(ev.path, bytes(ev.size))
+        else:  # pragma: no cover
+            raise ValueError(f"unknown op {ev.op!r}")
+
+    def run(self, schedule: Schedule, *,
+            base_t: float | None = None) -> list[OpResult]:
+        # Rebase the schedule's t=0 onto the clock at run start: catalog
+        # bootstrap has already consumed virtual time and resource lanes, and
+        # without the offset every op would inherit that backlog as latency.
+        t0 = self.clock.now if base_t is None else base_t
+        router = self.cluster.router
+        results: list[OpResult] = []
+        for ev in schedule.events:
+            self.clock.at(t0 + ev.t)
+            # charge all of this op's envelopes at its arrival: dispatch
+            # times include queueing straggle, which must not refill (or
+            # penalize) the tenant's token bucket
+            router.note_arrival(ev.tenant, t0 + ev.t)
+            status, errno = "ok", 0
+            try:
+                self._exec(self.fs_for(ev.tenant, ev.vclient), ev)
+            except AdmissionError:
+                status = "shed"
+            except FSError as e:
+                status, errno = "err", int(e.errno)
+            except (SimTimeout, SimCrash):
+                status = "err"
+            results.append(OpResult(ev=ev, status=status,
+                                    latency_s=self.clock.now - (t0 + ev.t),
+                                    errno=errno))
+        return results
+
+
+# =========================================================================
+# reporting
+# =========================================================================
+def jain_index(xs: list[float]) -> float:
+    """Jain's fairness index over per-tenant allocations: 1.0 = perfectly
+    fair, 1/n = one tenant takes everything."""
+    xs = [x for x in xs if x == x]
+    if not xs or all(x == 0 for x in xs):
+        return 1.0
+    s, sq = sum(xs), sum(x * x for x in xs)
+    return (s * s) / (len(xs) * sq) if sq else 1.0
+
+
+def _pctl(xs: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, dtype=float), q)) if xs else 0.0
+
+
+def _cell(rs: list[OpResult], horizon_s: float) -> dict:
+    lats = [r.latency_s for r in rs if r.status == "ok"]
+    ok = len(lats)
+    shed = sum(1 for r in rs if r.status == "shed")
+    err = len(rs) - ok - shed
+    return {
+        "offered": len(rs),
+        "offered_ops_s": round(len(rs) / horizon_s, 1),
+        "ok": ok, "shed": shed, "err": err,
+        "goodput_ops_s": round(ok / horizon_s, 1),
+        "shed_rate": round(shed / max(1, len(rs)), 4),
+        "p50_ms": round(_pctl(lats, 50) * 1e3, 4),
+        "p99_ms": round(_pctl(lats, 99) * 1e3, 4),
+        "p999_ms": round(_pctl(lats, 99.9) * 1e3, 4),
+        "mean_ms": round(float(np.mean(lats)) * 1e3, 4) if lats else 0.0,
+        "max_ms": round(max(lats) * 1e3, 4) if lats else 0.0,
+    }
+
+
+def summarize(results: list[OpResult], horizon_s: float) -> dict:
+    """Aggregate an open-loop run: overall + per-tenant latency percentiles,
+    goodput, shed rate, and Jain fairness over per-tenant served fractions
+    (goodput / offered — equal degradation scores 1.0, starvation of one
+    tenant pulls the index toward 1/n)."""
+    by_tenant: dict[str, list[OpResult]] = {}
+    for r in results:
+        by_tenant.setdefault(r.ev.tenant, []).append(r)
+    tenants = {name: _cell(rs, horizon_s)
+               for name, rs in sorted(by_tenant.items())}
+    served = [c["ok"] / max(1, c["offered"]) for c in tenants.values()]
+    return {"overall": _cell(results, horizon_s), "tenants": tenants,
+            "jain_fairness": round(jain_index(served), 4)}
+
+
+# =========================================================================
+# end-state fingerprinting (deterministic-replay / metamorphic tests)
+# =========================================================================
+def fs_fingerprint(fs: ObjcacheFS, root: str = "/") -> dict[str, tuple]:
+    """Deterministic digest of the namespace under `root`: directories map
+    to their sorted child names, files to (size, sha1 of content).  Excludes
+    mtimes/versions on purpose — two runs of the same trace through
+    different fast-path configurations commit at different virtual times but
+    must converge to the same *state*.  Reads go through the client, so
+    callers should clear any admission policy first."""
+    out: dict[str, tuple] = {}
+    stack = [root.rstrip("/") or "/"]
+    while stack:
+        cur = stack.pop()
+        names = fs.listdir(cur)
+        out[cur] = ("dir", tuple(names))
+        for name in names:
+            child = (cur.rstrip("/") + "/" + name)
+            st = fs.stat(child)
+            if st["kind"] == int(InodeKind.DIR):
+                stack.append(child)
+            else:
+                data = fs.read_file(child)
+                out[child] = ("file", st["size"],
+                              hashlib.sha1(data).hexdigest())
+    return out
+
+
+# =========================================================================
+# scaled hardware for load tests
+# =========================================================================
+def loadtest_hw() -> HardwareModel:
+    """Scaled-down hardware for open-loop load tests: few lanes and
+    millisecond-scale service times so the queueing knee appears at O(1e3)
+    ops/s with O(1e4) events — the same wall-time-driven scaling as the
+    workload constants in `benchmarks/common.py` (the reports read *ratios*,
+    not absolutes).  COS keeps its real latency class."""
+    return HardwareModel(
+        disk_write_bps=200e6, disk_read_bps=300e6, disk_latency_s=2e-3,
+        disk_parallelism=2,
+        nic_bps=1.25e9, net_rtt_s=2e-4, nic_parallelism=4,
+        loopback_bps=600e6, loopback_rtt_s=1e-4,
+        mem_bps=12.0e9,
+        cos_latency_s=30e-3, cos_conn_bps=120e6, cos_parallelism=16)
+
+
+def default_qos_policy(capacity_ops_s: float, env_per_op: float = 4.7
+                       ) -> dict[str, TenantQos]:
+    """A reference three-class policy over an estimated cluster capacity (in
+    filesystem ops/s) and an average envelope cost per op (~4.7 for the
+    mixed stat/list/read/write workload on strict clients): `gold` is
+    contracted *above* its expected share so it is never policed at 2x
+    overload, `silver` gets a fair share with burst headroom for its ON/OFF
+    spikes, `best` is clipped hard so its overload cannot starve the paying
+    classes.  Shares deliberately sum past 1.0 — classic statistical
+    multiplexing; the bucket rates bound each class's worst case, not the
+    steady-state sum."""
+    env = capacity_ops_s * env_per_op
+    return {
+        "gold": TenantQos(rate_ops_s=0.75 * env, burst=64, queue_depth=64),
+        "silver": TenantQos(rate_ops_s=0.25 * env, burst=48, queue_depth=48),
+        "best": TenantQos(rate_ops_s=0.20 * env, burst=24, queue_depth=16),
+    }

@@ -23,7 +23,7 @@ from dataclasses import dataclass
 from typing import TYPE_CHECKING, Any, Callable
 
 from .simclock import HardwareModel, SimClock
-from .types import FSError
+from .types import AdmissionError, FSError
 
 if TYPE_CHECKING:  # pragma: no cover
     from .server import CacheServer
@@ -83,6 +83,70 @@ def collect_handlers(*objs: Any) -> dict[str, tuple[Callable, RpcSpec]]:
     return table
 
 
+@dataclass(frozen=True)
+class TenantQos:
+    """Per-tenant admission parameters: a token bucket plus a bounded queue.
+
+    ``rate_ops_s`` is the sustained admitted envelope rate (token refill);
+    ``burst`` is the bucket capacity — envelopes admitted back-to-back after
+    an idle period; ``queue_depth`` is how many envelopes' worth of backlog
+    the fabric will *delay* rather than shed, so the maximum admission delay
+    is ``queue_depth / rate_ops_s``.  One wire envelope costs one token
+    (a batch counts once, same as `Router.rpc_count`)."""
+
+    rate_ops_s: float
+    burst: int = 8
+    queue_depth: int = 32
+
+
+class AdmissionControl:
+    """Virtual-time token buckets (GCRA form), one per policed tenant.
+
+    The bucket is kept as a theoretical-arrival-time (`tat`) per tenant:
+    an envelope arriving at ``now`` owes ``wait = max(0, tat - tol - now)``
+    where ``tol = (burst - 1) / rate`` is the idle credit.  ``wait`` within
+    the bounded queue is served as an admission *delay* (the envelope
+    dispatches late); beyond it the envelope is *shed* without consuming a
+    token.  Exact at simclock boundaries: after a drained burst the next
+    token is available precisely ``1 / rate`` later.  Tenants without a
+    policy entry are unpoliced.
+
+    The bucket must be driven by a per-tenant *monotone* clock — the time
+    the tenant's operation **arrived** at the fabric, not the time each
+    envelope happens to dispatch.  Envelope dispatch times include the
+    queueing delay of earlier envelopes (and any admission delay the fabric
+    itself added), so charging them would let an over-rate tenant mint
+    refill credit from its own backlog and never accumulate debt.  Callers
+    with naturally monotone send times (closed-loop clients) just pass
+    those; the open-loop runner pins the charge time for all of an op's
+    envelopes to the op's scheduled arrival via `Router.note_arrival`."""
+
+    def __init__(self, policy: dict[str, TenantQos]) -> None:
+        self.policy = dict(policy)
+        self._tat: dict[str, float] = {}
+
+    def decide(self, tenant: str, now: float) -> tuple[str, float]:
+        """Returns ("admit", 0) | ("delay", wait) | ("shed", retry_after);
+        `wait` is relative to `now`, the envelope's charge time."""
+        qos = self.policy.get(tenant)
+        if qos is None:
+            return "admit", 0.0
+        inc = 1.0 / qos.rate_ops_s
+        tol = (max(1, qos.burst) - 1) * inc
+        tat = max(self._tat.get(tenant, 0.0), now)
+        wait = tat - tol - now
+        # epsilon on both comparisons: tat accumulates `inc` per envelope,
+        # so at an exact refill boundary (now == k / rate) float residue
+        # would otherwise turn a conforming envelope into a spurious delay
+        if wait <= 1e-12:
+            self._tat[tenant] = tat + inc
+            return "admit", 0.0
+        if wait > qos.queue_depth * inc + 1e-12:
+            return "shed", wait          # no token consumed, tat unchanged
+        self._tat[tenant] = tat + inc
+        return "delay", wait
+
+
 class Router:
     def __init__(self, clock: SimClock, hw: HardwareModel,
                  timeout_s: float = 1.0) -> None:
@@ -102,6 +166,13 @@ class Router:
         # timeouts (unreachable dst) / errors (handler raised)
         self.method_stats: dict[str, dict[str, float]] = {}
         self._skeys: dict[str, tuple[str, str, str]] = {}
+        # per-tenant QoS admission at the fabric edge (None = everything
+        # admitted); tenant_stats: admitted / delayed / shed / delay_s
+        self.admission: AdmissionControl | None = None
+        self.tenant_stats: dict[str, dict[str, float]] = {}
+        # open-loop arrival stamps: tenant -> charge time for its envelopes
+        # (see AdmissionControl docstring); absent = charge at dispatch time
+        self.tenant_clock: dict[str, float] = {}
 
     def register(self, server: "CacheServer") -> None:
         self.servers[server.node_id] = server
@@ -134,6 +205,60 @@ class Router:
             return nic.acquire(t, nbytes)
         return t + nbytes / self.hw.nic_bps
 
+    # ---- per-tenant QoS admission ----------------------------------------------
+    def set_admission(self, policy: dict[str, TenantQos] | None) -> None:
+        """Install (or clear, with None/{}) per-tenant admission control.
+        The policy applies to tenant-tagged envelopes only; untagged calls
+        (server-to-server traffic, the operator, control-plane pulls) are
+        never policed."""
+        self.admission = AdmissionControl(policy) if policy else None
+
+    def _tstat(self, tenant: str) -> dict[str, float]:
+        st = self.tenant_stats.get(tenant)
+        if st is None:
+            st = {"admitted": 0, "delayed": 0, "shed": 0, "delay_s": 0.0}
+            self.tenant_stats[tenant] = st
+        return st
+
+    def tenant_delay_s(self, tenant: str | None) -> float:
+        """Cumulative admission delay charged to `tenant` so far.  Clients
+        diff this around an operation to compose server backpressure hints
+        with admission delays instead of double-counting the stall."""
+        if tenant is None:
+            return 0.0
+        st = self.tenant_stats.get(tenant)
+        return st["delay_s"] if st is not None else 0.0
+
+    def note_arrival(self, tenant: str, t: float) -> None:
+        """Pin the admission charge time for `tenant`'s next envelopes to
+        `t` — an open-loop driver calls this with each op's scheduled
+        arrival, so all of the op's envelopes are charged as one burst at
+        arrival instead of at their (queueing-inflated) dispatch times."""
+        self.tenant_clock[tenant] = t
+
+    def _admit(self, tenant: str | None, method: str, start: float) -> float:
+        """Apply admission control to one envelope; returns the (possibly
+        delayed) dispatch time, or raises `AdmissionError` on shed."""
+        if tenant is None or self.admission is None:
+            return start
+        charge = self.tenant_clock.get(tenant, start)
+        verdict, wait = self.admission.decide(tenant, charge)
+        st = self._tstat(tenant)
+        if verdict == "shed":
+            st["shed"] += 1
+            raise AdmissionError(tenant, method, wait)
+        st["admitted"] += 1
+        if verdict == "delay":
+            # the envelope may dispatch once its conforming time (relative
+            # to the charge clock) has passed; service straggle that already
+            # pushed `start` beyond it absorbs the admission delay for free
+            extra = max(0.0, charge + wait - start)
+            if extra > 0.0:
+                st["delayed"] += 1
+                st["delay_s"] += extra
+            return start + extra
+        return start
+
     def _mstat(self, method: str) -> dict[str, float]:
         st = self.method_stats.get(method)
         if st is None:
@@ -153,7 +278,7 @@ class Router:
     def rpc(self, src: str | None, dst: str, method: str, start: float,
             nbytes_out: int | None = None, nbytes_in: int | None = None,
             nbytes_extra: int = 0, embedded_local: bool = False,
-            **kwargs: Any) -> tuple[Any, float]:
+            tenant: str | None = None, **kwargs: Any) -> tuple[Any, float]:
         """Invoke registered handler `method` on server `dst`.
 
         The handler signature is `m(start: float, **kwargs) -> (result,
@@ -164,7 +289,10 @@ class Router:
         this call (e.g. a chunk-owner's MPU part upload straight to COS):
         they count toward the method's byte accounting so `rpc_stats()` is
         truthful about where the data goes, but are not charged to the
-        src->dst NIC transfer, which only carries the control message."""
+        src->dst NIC transfer, which only carries the control message.
+        A `tenant` tag subjects the envelope to the installed admission
+        policy: it may dispatch late (queued) or raise `AdmissionError`
+        (shed) before any transfer is charged."""
         # a bad method name is a programming error even when the node is
         # down — surface it before (and without) any timeout accounting
         node_handlers = self.handlers.get(dst)
@@ -172,6 +300,7 @@ class Router:
             raise UnknownRpcError(
                 f"no RPC handler {method!r} registered on {dst}; "
                 f"known: {self.registered_methods(dst)}")
+        start = self._admit(tenant, method, start)
         if not self.reachable(dst):
             self._mstat(method)["timeouts"] += 1
             raise SimTimeout(f"rpc {method} to {dst}: timeout "
@@ -208,7 +337,8 @@ class Router:
         return result, back
 
     def rpc_batch(self, src: str | None, dst: str, calls: list[dict],
-                  start: float, embedded_local: bool = False
+                  start: float, embedded_local: bool = False,
+                  tenant: str | None = None
                   ) -> tuple[list[tuple[str, Any, float]], float]:
         """Same-destination coalescing: one wire envelope carrying N typed
         sub-calls.  Each element of `calls` is
@@ -231,6 +361,8 @@ class Router:
                     raise UnknownRpcError(
                         f"no RPC handler {c['method']!r} registered on {dst}; "
                         f"known: {self.registered_methods(dst)}")
+        # one envelope = one token, same unit as rpc_count
+        start = self._admit(tenant, f"batch[{len(calls)}]", start)
         if not self.reachable(dst):
             for c in calls:
                 self._mstat(c["method"])["timeouts"] += 1

@@ -36,6 +36,15 @@ class SimClock:
     def sleep(self, dt: float) -> None:
         self.now += max(0.0, dt)
 
+    def at(self, t: float) -> None:
+        """Jump the clock to absolute time `t` — may rewind.  Open-loop load
+        generation (`core/loadgen.py`) starts every operation at its
+        *scheduled* arrival time regardless of when the previous one
+        finished; `Resource` lanes keep their own ``free_at`` bookkeeping, so
+        queueing delay under overload still accumulates correctly even
+        though the foreground clock moves backwards between operations."""
+        self.now = t
+
 
 @dataclass
 class Resource:

@@ -85,6 +85,7 @@ class Errno(enum.IntEnum):
     OK = 0
     ENOENT = 2
     EIO = 5
+    EAGAIN = 11       # shed by per-tenant admission control at the RPC fabric
     EEXIST = 17
     ENOTDIR = 20
     EISDIR = 21
@@ -112,6 +113,21 @@ class StaleLeaseError(FSError):
                          f"lease on ino {ino}: epoch {client_epoch} != "
                          f"{server_epoch}")
         self.ino = ino
+
+
+class AdmissionError(FSError):
+    """The RPC fabric shed this envelope: the caller's tenant is over its
+    token-bucket rate and the bounded admission queue is full (EAGAIN).
+    Open-loop load generators record the shed and move on; a foreground
+    application could retry after `retry_after_s` of virtual time."""
+
+    def __init__(self, tenant: str, method: str, retry_after_s: float) -> None:
+        super().__init__(Errno.EAGAIN,
+                         f"tenant {tenant!r} shed at {method} "
+                         f"(retry in {retry_after_s:.6f}s)")
+        self.tenant = tenant
+        self.method = method
+        self.retry_after_s = retry_after_s
 
 
 class InodeKind(enum.IntEnum):

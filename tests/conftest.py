@@ -28,9 +28,9 @@ def workdir():
     shutil.rmtree(d, ignore_errors=True)
 
 
-def make_cluster(workdir, n=3, chunk=CHUNK, buckets=None):
-    cfg = ServerConfig(chunk_size=chunk)
-    cl = Cluster(workdir, buckets or [BucketMount("b", "b")], cfg=cfg)
+def make_cluster(workdir, n=3, chunk=CHUNK, buckets=None, hw=None, cfg=None):
+    cfg = cfg or ServerConfig(chunk_size=chunk)
+    cl = Cluster(workdir, buckets or [BucketMount("b", "b")], hw=hw, cfg=cfg)
     cl.start(n)
     return cl
 

@@ -3,7 +3,8 @@ rename/unlink/migration handoff, and WAL-replay re-derivation of epochs."""
 
 import pytest
 
-from repro.core import Errno
+from repro.core import (Errno, OpenLoopRunner, PoissonArrivals, TenantSpec,
+                        build_schedule, fs_fingerprint)
 from repro.core.types import StaleLeaseError, meta_key
 from conftest import make_cluster, make_fs
 
@@ -142,6 +143,58 @@ def test_migration_handoff_bumps_epoch_and_drops_client_lease(workdir):
     # correctness either way: listing still works against the new ring
     assert "m.bin" in fs.listdir("/b")
     cl.close()
+
+
+def test_fastpaths_preserve_semantics_on_shared_trace(workdir):
+    """Metamorphic check over the open-loop harness: replaying the same
+    trace with the metadata fast paths (leases + batching) on vs off must
+    reach the identical filesystem end-state — the fast paths may only
+    change *how many* envelopes cross the wire, never what the ops do."""
+    import os
+
+    def replay(sub, fast):
+        os.makedirs(sub)
+        cl = make_cluster(sub, n=2, chunk=64 * 1024)
+        try:
+            if not fast:
+                cl.cfg.lease_ttl_s = 0.0
+                cl.cfg.batch_rpcs = False
+            boot = make_fs(cl, consistency="strict")
+            boot.client.client_id = 9001
+            boot.makedirs("/bench/a")
+            dirs, files = [], []
+            for d in range(2):
+                dp = f"/data{d}"
+                boot.mkdir(dp)
+                dirs.append(dp)
+                for i in range(6):
+                    p = f"{dp}/f{i}.bin"
+                    boot.write_file(p, bytes(2048))
+                    files.append(p)
+            # metadata-heavy mix so lease hits and batchable lookups occur
+            spec = TenantSpec(
+                "a", PoissonArrivals(400), n_clients=8, write_bytes=2048,
+                op_mix={"stat": 0.35, "listdir": 0.25, "read": 0.20,
+                        "write": 0.15, "create": 0.05})
+            sched = build_schedule([spec], files, dirs, horizon_s=0.5,
+                                   seed=77)
+            # small client pool: repeat metadata hits land on warm leases
+            runner = OpenLoopRunner(cl, [spec], consistency="weak",
+                                    pool_per_tenant=2)
+            results = runner.run(sched)
+            reader = make_fs(cl, consistency="strict")
+            reader.client.client_id = 9002
+            return ([(r.ev.t, r.status) for r in results],
+                    fs_fingerprint(reader), cl.router.rpc_count)
+        finally:
+            cl.close()
+
+    ops_on, fp_on, env_on = replay(os.path.join(workdir, "on"), fast=True)
+    ops_off, fp_off, env_off = replay(os.path.join(workdir, "off"),
+                                      fast=False)
+    assert ops_on == ops_off            # every op succeeds/fails identically
+    assert fp_on == fp_off              # identical tree, sizes, and content
+    assert env_on < env_off             # strictly fewer wire envelopes
 
 
 def test_lease_epochs_rederived_by_replay(workdir):

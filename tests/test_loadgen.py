@@ -1,0 +1,172 @@
+"""Determinism and correctness of the open-loop load generator.
+
+The harness must be bit-reproducible: same seed ⇒ identical arrival
+schedule, per-tenant op mix, and filesystem end-state; and a schedule must
+survive a round-trip through its JSON trace format.  All runs use fixed
+seeds and the virtual clock — no wall-clock dependence anywhere."""
+
+import json
+
+from conftest import make_cluster
+from repro.core import (ClientConfig, ObjcacheClient, ObjcacheFS,
+                        OnOffArrivals, OpenLoopRunner, PoissonArrivals,
+                        Schedule, TenantSpec, TraceArrivals, build_schedule,
+                        fs_fingerprint, loadtest_hw, summarize)
+
+import numpy as np
+
+
+def _catalog(cl, tenants=("a", "b")):
+    # fixed client id: the global counter's decimal width leaks into staged
+    # part keys (payload bytes), perturbing virtual timing across clusters
+    fs = ObjcacheFS(ObjcacheClient(
+        cl.router, cl.clock, cl.node_list()[0],
+        ClientConfig(consistency="strict"), chunk_size=cl.cfg.chunk_size,
+        client_id=9001))
+    for t in tenants:
+        fs.makedirs(f"/bench/{t}")
+    dirs, files = [], []
+    for d in range(3):
+        dp = f"/data{d}"
+        fs.mkdir(dp)
+        dirs.append(dp)
+        for i in range(6):
+            p = f"{dp}/f{i}.bin"
+            fs.write_file(p, bytes(2048))
+            files.append(p)
+    return fs, files, dirs
+
+
+def _tenants():
+    return [
+        TenantSpec("a", PoissonArrivals(150), n_clients=32, write_bytes=2048),
+        TenantSpec("b", OnOffArrivals(300, mean_on_s=0.1, mean_off_s=0.1),
+                   n_clients=32, write_bytes=2048),
+    ]
+
+
+def test_same_seed_identical_schedule():
+    fd = [f"/data0/f{i}.bin" for i in range(6)], ["/data0"]
+    s1 = build_schedule(_tenants(), fd[0], fd[1], horizon_s=0.5, seed=42)
+    s2 = build_schedule(_tenants(), fd[0], fd[1], horizon_s=0.5, seed=42)
+    assert s1.events == s2.events
+    assert len(s1.events) > 20
+    # events are time-ordered and all inside the horizon
+    ts = [ev.t for ev in s1.events]
+    assert ts == sorted(ts)
+    assert all(0.0 <= t < 0.5 for t in ts)
+    s3 = build_schedule(_tenants(), fd[0], fd[1], horizon_s=0.5, seed=43)
+    assert s1.events != s3.events
+
+
+def test_adding_a_tenant_preserves_existing_streams():
+    """Per-tenant seed substreams: tenant a's events are byte-identical
+    whether or not tenant b exists."""
+    files = [f"/data0/f{i}.bin" for i in range(6)]
+    both = build_schedule(_tenants(), files, ["/data0"], 0.5, seed=7)
+    solo = build_schedule(_tenants()[:1], files, ["/data0"], 0.5, seed=7)
+    assert [e for e in both.events if e.tenant == "a"] == solo.events
+
+
+def test_trace_format_roundtrip():
+    files = [f"/data0/f{i}.bin" for i in range(6)]
+    sched = build_schedule(_tenants(), files, ["/data0"], 0.4, seed=9)
+    payload = json.loads(json.dumps(sched.to_payload()))
+    back = Schedule.from_payload(payload)
+    assert back.horizon_s == sched.horizon_s
+    assert back.seed == sched.seed
+    assert back.events == sched.events
+    # and a replayed trace drives TraceArrivals verbatim
+    offsets = tuple(ev.t for ev in sched.events if ev.tenant == "a")
+    rng = np.random.default_rng(0)
+    assert TraceArrivals(offsets).times(0.4, rng) == list(offsets)
+    assert TraceArrivals(offsets).times(0.1, rng) == \
+        [t for t in offsets if t < 0.1]
+
+
+def test_per_tenant_op_mix_deterministic():
+    files = [f"/data0/f{i}.bin" for i in range(6)]
+    sched = build_schedule(_tenants(), files, ["/data0"], 0.5, seed=11)
+    mix = {}
+    for ev in sched.events:
+        mix.setdefault(ev.tenant, {}).setdefault(ev.op, 0)
+        mix[ev.tenant][ev.op] += 1
+    again = {}
+    for ev in build_schedule(_tenants(), files, ["/data0"], 0.5,
+                             seed=11).events:
+        again.setdefault(ev.tenant, {}).setdefault(ev.op, 0)
+        again[ev.tenant][ev.op] += 1
+    assert mix == again
+    # the default mix is stat-heavy for every tenant
+    for t, ops in mix.items():
+        assert ops.get("stat", 0) >= ops.get("create", 0)
+
+
+def test_zipf_popularity_is_heavy_tailed():
+    files = [f"/data0/f{i}.bin" for i in range(6)]
+    spec = TenantSpec("a", PoissonArrivals(2000), n_clients=32, zipf_s=1.3)
+    sched = build_schedule([spec], files, ["/data0"], 0.5, seed=3)
+    counts = {}
+    for ev in sched.events:
+        if ev.op in ("stat", "read", "write"):
+            counts[ev.path] = counts.get(ev.path, 0) + 1
+    ranked = sorted(counts.values(), reverse=True)
+    # the most popular file dominates the least popular by a wide margin
+    assert ranked[0] > 3 * ranked[-1]
+
+
+def _run_once(workdir, seed=17):
+    cl = make_cluster(workdir, n=2, chunk=64 * 1024, hw=loadtest_hw())
+    try:
+        _, files, dirs = _catalog(cl)
+        tenants = _tenants()
+        sched = build_schedule(tenants, files, dirs, horizon_s=0.4, seed=seed)
+        runner = OpenLoopRunner(cl, tenants, consistency="strict",
+                                pool_per_tenant=4)
+        results = runner.run(sched)
+        summary = summarize(results, 0.4)
+        reader = ObjcacheFS(ObjcacheClient(
+            cl.router, cl.clock, cl.node_list()[0],
+            ClientConfig(consistency="strict"),
+            chunk_size=cl.cfg.chunk_size, client_id=9002))
+        fp = fs_fingerprint(reader)
+        return summary, fp, [(r.ev.t, r.status, r.latency_s) for r in results]
+    finally:
+        cl.close()
+
+
+def test_same_seed_identical_end_state_and_summary(workdir):
+    import os
+    d1, d2 = os.path.join(workdir, "a"), os.path.join(workdir, "b")
+    os.makedirs(d1)
+    os.makedirs(d2)
+    s1, fp1, r1 = _run_once(d1)
+    s2, fp2, r2 = _run_once(d2)
+    assert r1 == r2            # per-op status AND virtual-time latency
+    assert s1 == s2
+    assert fp1 == fp2
+    assert s1["overall"]["ok"] > 0
+    assert s1["overall"]["err"] == 0
+
+
+def test_open_loop_latency_counts_queueing(workdir):
+    """Two ops scheduled at (nearly) the same arrival: the second one's
+    latency includes waiting for the first — the whole point of open loop."""
+    cl = make_cluster(workdir, n=2, chunk=64 * 1024, hw=loadtest_hw())
+    try:
+        _, files, dirs = _catalog(cl, tenants=("a",))
+        spec = TenantSpec("a", TraceArrivals((0.0, 0.0, 0.0, 0.0)),
+                          n_clients=1,
+                          op_mix={"write": 1.0}, write_bytes=32768)
+        sched = build_schedule([spec], files, dirs, horizon_s=1.0, seed=5)
+        assert len(sched.events) == 4
+        runner = OpenLoopRunner(cl, [spec], consistency="strict",
+                                pool_per_tenant=1)
+        results = runner.run(sched)
+        lats = [r.latency_s for r in results]
+        # same client pool slot, same arrival instant: strictly increasing
+        # completion times mean each op queued behind the previous one
+        assert lats == sorted(lats)
+        assert lats[-1] > 2 * lats[0]
+    finally:
+        cl.close()

@@ -1,0 +1,258 @@
+"""QoS admission control at the RPC fabric: token-bucket math, typed shed
+errors, overload protection, and composition with write backpressure."""
+
+import pytest
+
+from conftest import make_cluster, make_fs
+from repro.core import (AdmissionControl, AdmissionError, ClientConfig,
+                        Errno, ObjcacheClient, ObjcacheFS, OnOffArrivals,
+                        OpenLoopRunner, PoissonArrivals, ServerConfig,
+                        TenantQos, TenantSpec, build_schedule, loadtest_hw,
+                        summarize)
+
+
+# =========================================================================
+# GCRA token-bucket math, directly at simclock boundaries
+# =========================================================================
+def test_burst_drains_then_sheds():
+    ac = AdmissionControl({"t": TenantQos(rate_ops_s=100, burst=4,
+                                          queue_depth=0)})
+    for _ in range(4):
+        assert ac.decide("t", 0.0) == ("admit", 0.0)
+    verdict, wait = ac.decide("t", 0.0)
+    assert verdict == "shed"
+    assert wait > 0.0
+
+
+def test_refill_is_exact_at_rate_boundary():
+    """After a drained burst the next token is available at exactly 1/rate
+    of virtual time — no drift from repeated float accumulation."""
+    rate, burst = 100.0, 4
+    inc = 1.0 / rate
+    ac = AdmissionControl({"t": TenantQos(rate_ops_s=rate, burst=burst,
+                                          queue_depth=0)})
+    for _ in range(burst):
+        assert ac.decide("t", 0.0)[0] == "admit"
+    # a hair before the boundary: still shed
+    assert ac.decide("t", inc * 0.999)[0] == "shed"
+    # at the boundary: exactly one token
+    assert ac.decide("t", inc)[0] == "admit"
+    assert ac.decide("t", inc)[0] == "shed"
+    # steady state: one admit per 1/rate tick, forever conforming
+    for k in range(2, 50):
+        assert ac.decide("t", k * inc)[0] == "admit"
+
+
+def test_idle_credit_caps_at_burst():
+    ac = AdmissionControl({"t": TenantQos(rate_ops_s=100, burst=4,
+                                          queue_depth=0)})
+    for _ in range(4):
+        assert ac.decide("t", 1000.0)[0] == "admit"
+    # a long idle period refills at most `burst` tokens, not rate * idle
+    assert ac.decide("t", 1000.0)[0] == "shed"
+
+
+def test_delay_queue_bounds_then_shed():
+    rate, burst, depth = 100.0, 1, 3
+    inc = 1.0 / rate
+    ac = AdmissionControl({"t": TenantQos(rate_ops_s=rate, burst=burst,
+                                          queue_depth=depth)})
+    assert ac.decide("t", 0.0) == ("admit", 0.0)
+    waits = []
+    for _ in range(depth):
+        verdict, wait = ac.decide("t", 0.0)
+        assert verdict == "delay"
+        waits.append(wait)
+    # each queued envelope waits one more token interval than the last
+    assert waits == pytest.approx([inc, 2 * inc, 3 * inc])
+    verdict, wait = ac.decide("t", 0.0)
+    assert verdict == "shed"
+    # the shed did not consume a token: the queue drains as scheduled and
+    # at t = 4/rate there is exactly one fresh token again
+    assert ac.decide("t", 4 * inc)[0] == "admit"
+    assert ac.decide("t", 4 * inc)[0] == "delay"
+
+
+def test_unpoliced_tenant_always_admitted():
+    ac = AdmissionControl({"t": TenantQos(rate_ops_s=1, burst=1,
+                                          queue_depth=0)})
+    for _ in range(100):
+        assert ac.decide("other", 0.0) == ("admit", 0.0)
+
+
+# =========================================================================
+# fabric integration: typed errors, stats, no-policy behavior
+# =========================================================================
+def _tagged_fs(cl, tenant, client_id=9100):
+    client = ObjcacheClient(
+        cl.router, cl.clock, cl.node_list()[0],
+        ClientConfig(consistency="strict", tenant=tenant),
+        chunk_size=cl.cfg.chunk_size, client_id=client_id)
+    return ObjcacheFS(client)
+
+
+def test_shed_surfaces_as_typed_admission_error(cluster):
+    fs = _tagged_fs(cluster, "busy")
+    fs.makedirs("/bench/busy")
+    cluster.router.set_admission(
+        {"busy": TenantQos(rate_ops_s=10, burst=1, queue_depth=0)})
+    with pytest.raises(AdmissionError) as ei:
+        for i in range(50):
+            fs.stat("/bench/busy")
+    err = ei.value
+    assert err.errno == Errno.EAGAIN
+    assert err.tenant == "busy"
+    assert err.retry_after_s > 0.0
+    assert err.method
+    st = cluster.router.tenant_stats["busy"]
+    assert st["shed"] >= 1
+    assert st["admitted"] >= 1
+
+
+def test_untagged_and_no_policy_traffic_never_policed(cluster):
+    fs = make_fs(cluster)                      # untagged client
+    fs.makedirs("/bench/x")
+    cluster.router.set_admission(
+        {"busy": TenantQos(rate_ops_s=1, burst=1, queue_depth=0)})
+    for _ in range(20):
+        fs.stat("/bench/x")                    # never raises
+    assert "busy" not in {k: v for k, v in cluster.router.tenant_stats.items()
+                          if v["shed"]}
+    # clearing the policy unpolices tagged clients too
+    cluster.router.set_admission(None)
+    tagged = _tagged_fs(cluster, "busy")
+    for _ in range(20):
+        tagged.stat("/bench/x")
+    assert cluster.router.admission is None
+
+
+def test_shed_tenant_can_still_pull_node_list(cluster):
+    """Control-plane traffic is untagged: a fully shed tenant still learns
+    the node list, so it can retry against the right owners later."""
+    cluster.router.set_admission(
+        {"busy": TenantQos(rate_ops_s=1e-6, burst=1, queue_depth=0)})
+    client = ObjcacheClient(
+        cluster.router, cluster.clock, cluster.node_list()[0],
+        ClientConfig(consistency="strict", tenant="busy"),
+        chunk_size=cluster.cfg.chunk_size, client_id=9101)
+    client._pull_node_list()                   # must not raise
+    assert client.node_list
+
+
+# =========================================================================
+# overload protection, end to end over the open-loop harness
+# =========================================================================
+def test_overload_protects_gold_tenant(workdir):
+    """At ~2x overload the contracted tenant keeps its p99 within budget
+    and is never shed; the best-effort tenant absorbs the overload as
+    sheds.  Without admission, everyone collapses together."""
+    def run(admission):
+        import os
+        sub = os.path.join(workdir, "adm" if admission else "raw")
+        os.makedirs(sub)
+        cl = make_cluster(sub, n=3, chunk=64 * 1024, hw=loadtest_hw())
+        try:
+            boot = _tagged_fs(cl, None, client_id=9001)
+            dirs, files = [], []
+            for d in range(4):
+                dp = f"/data{d}"
+                boot.mkdir(dp)
+                dirs.append(dp)
+                for i in range(8):
+                    p = f"{dp}/f{i}.bin"
+                    boot.write_file(p, bytes(4096))
+                    files.append(p)
+            for t in ("gold", "best"):
+                boot.makedirs(f"/bench/{t}")
+            tenants = [
+                TenantSpec("gold", PoissonArrivals(250), n_clients=64,
+                           write_bytes=4096, qos_class="gold"),
+                TenantSpec("best", PoissonArrivals(750), n_clients=128,
+                           write_bytes=4096, qos_class="best"),
+            ]
+            sched = build_schedule(tenants, files, dirs, horizon_s=1.0,
+                                   seed=1234)
+            if admission:
+                cl.router.set_admission({
+                    # ~4.7 envelopes per op; gold contracted over its offer,
+                    # best clipped near 100 ops/s
+                    "gold": TenantQos(rate_ops_s=1600, burst=64,
+                                      queue_depth=64),
+                    "best": TenantQos(rate_ops_s=500, burst=24,
+                                      queue_depth=16),
+                })
+            runner = OpenLoopRunner(cl, tenants, consistency="strict",
+                                    pool_per_tenant=8)
+            return summarize(runner.run(sched), 1.0)
+        finally:
+            cl.close()
+
+    raw = run(admission=False)
+    adm = run(admission=True)
+    gold, best = adm["tenants"]["gold"], adm["tenants"]["best"]
+    assert gold["shed"] == 0
+    assert best["shed_rate"] > 0.3
+    # gold's p99 budget: bounded, and far below the collapsed no-admission
+    # tail at the same offered load
+    assert gold["p99_ms"] <= 150.0
+    assert raw["tenants"]["gold"]["p99_ms"] > 2 * gold["p99_ms"]
+    # shedding best-effort work must not starve it completely of goodput
+    assert best["ok"] > 0
+
+
+# =========================================================================
+# composition with write backpressure (§5.2 bp_delay hints)
+# =========================================================================
+def _bp_cluster(workdir, chunk=64 * 1024):
+    cfg = ServerConfig(chunk_size=chunk, dirty_hiwater_bytes=chunk,
+                       dirty_lowater_bytes=chunk // 2)
+    return make_cluster(workdir, n=2, chunk=chunk, cfg=cfg)
+
+
+def test_bp_delay_stalls_untagged_client(workdir):
+    """Control: with no admission in play, the bp_delay hint stalls the
+    client for its full duration."""
+    cl = _bp_cluster(workdir)
+    try:
+        fs = make_fs(cl)
+        for i in range(8):
+            fs.write_file(f"/f{i}.bin", bytes(96 * 1024))
+        assert fs.client.stats.get("bp_stalls", 0) >= 1
+        assert fs.client.stats.get("bp_stall_s", 0.0) > 0.0
+    finally:
+        cl.close()
+
+
+def test_bp_delay_composes_with_admission_delay(workdir):
+    """A tenant already delayed by admission during staging only stalls for
+    the *remainder* of the backpressure hint — the two throttles compose
+    instead of double-counting the same slowdown."""
+    cl = _bp_cluster(workdir)
+    try:
+        # slow refill + deep queue: staging envelopes are delayed (never
+        # shed), so every write carries admission delay into the bp window
+        cl.router.set_admission(
+            {"w": TenantQos(rate_ops_s=200, burst=2, queue_depth=4000)})
+        fs = _tagged_fs(cl, "w", client_id=9102)
+        for i in range(8):
+            fs.write_file(f"/g{i}.bin", bytes(96 * 1024))
+        st = cl.router.tenant_stats["w"]
+        assert st["delayed"] >= 1
+        assert st["delay_s"] > 0.0
+        # the servers still issued backpressure hints...
+        assert sum(s.stats.get("bp_stalls", 0)
+                   for s in cl.servers.values()) >= 1
+        # ...but the client's own stall time is smaller than the untagged
+        # control's, because admission delay absorbed (part of) each hint
+        control = ObjcacheFS(ObjcacheClient(
+            cl.router, cl.clock, cl.node_list()[0],
+            ClientConfig(consistency="strict"),
+            chunk_size=cl.cfg.chunk_size, client_id=9103))
+        for i in range(8):
+            control.write_file(f"/h{i}.bin", bytes(96 * 1024))
+        tagged_stall = fs.client.stats.get("bp_stall_s", 0.0)
+        control_stall = control.client.stats.get("bp_stall_s", 0.0)
+        assert control_stall > 0.0
+        assert tagged_stall < control_stall
+    finally:
+        cl.close()
