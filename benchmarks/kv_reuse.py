@@ -1,0 +1,196 @@
+"""KV-cache reuse: time-to-first-token through the cache tiers.
+
+The Fig. 11 methodology applied to *inference state* instead of params
+(the serving scenario the paper never measured; ObjectCache, arXiv
+2605.22850, is the reference workload shape): a replica persists
+per-layer KV blocks keyed by prompt prefix through ObjcacheFS, and a
+request's TTFT is measured with those blocks resident in each tier —
+
+* ``cold_cos``       — fresh cluster after a scale-to-zero drain; blocks
+                       fetched from external COS;
+* ``cluster_cache``  — a second client on another node; blocks are
+                       cluster-resident after the cold fetch;
+* ``node_cache``     — the same client again; node-local page cache;
+* ``exact_hit``      — full-prompt prefix stored: one decode step resumes
+                       generation (longest-prefix match at ``len-1``);
+* ``no_reuse``       — recompute-everything baseline (no KV fetch at all).
+
+TTFT = virtual time of KV lookup + block fetch + a modeled per-token step
+cost for the tokens actually pushed through decode (`PREFILL_TOK_S`; data
+movement is on the sim clock already, model step time is not — the JAX
+compute here runs reduced configs whose wall time is meaningless for the
+paper-scale ratio).  A `warm_restart` section times the full
+scale-down-survivor sequence on a third cluster: params load + hot-KV
+preload + first token.  Tokens are asserted identical across every cell.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from .common import make_cluster, make_fs, save_report
+
+N_PROMPT = 48
+BLOCK_TOKENS = 8
+EXTEND = 8                 # eval prompt: shared 40-prefix + 8 fresh tokens
+MAX_NEW = 4
+PREFILL_TOK_S = 2e-3       # modeled decode-step cost (virtual s/token)
+
+
+def _attach(cl_from, workdir: str, n: int = 4):
+    """New cluster over the *same* COS bucket — the scale-to-zero
+    survivor's view (cluster caches empty, external storage intact)."""
+    cl = make_cluster(workdir, n=n)
+    cl.cos = cl_from.cos
+    for s in cl.servers.values():
+        s.cos = cl_from.cos
+    return cl
+
+
+def _ttft(cl, engine, prompt, label: str, quiet: bool) -> dict:
+    t0 = cl.clock.now
+    toks, info = engine.generate_with_reuse(prompt, max_new=MAX_NEW,
+                                            store=False)
+    cl.clock.sleep((info["prefill_steps"] + 1) * PREFILL_TOK_S)
+    cell = {"ttft_s": round(cl.clock.now - t0, 6),
+            "kv_fetch_bytes": info["kv_read_bytes"],
+            "reused_len": info["reused_len"],
+            "prefill_steps": info["prefill_steps"],
+            "exact_hit": info["exact_hit"], "tokens": toks}
+    if not quiet:
+        print(f"[kv_reuse] {label:13s} ttft={cell['ttft_s'] * 1e3:8.2f}ms "
+              f"reused={info['reused_len']:2d} "
+              f"prefill={info['prefill_steps']:2d}")
+    return cell
+
+
+def run(quiet: bool = False) -> dict:
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.checkpoint import CheckpointManager
+    from repro.serving import KVCacheStore, ModelStore, ServingEngine
+
+    wds = [tempfile.mkdtemp(prefix=f"bench-kv-{i}-") for i in range(3)]
+    try:
+        cfg = get_reduced("qwen3-0.6b")
+        model = build_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0), max_seq=64)
+        rng = np.random.default_rng(11)
+        prompt = rng.integers(0, cfg.vocab, N_PROMPT, dtype=np.int32)
+        # eval prompt shares the first 40 tokens (a block boundary), then
+        # diverges: every tier cell resumes from the 40-snapshot and
+        # prefills the same 8 fresh tokens — only the tier differs
+        prompt_eval = np.concatenate(
+            [prompt[:N_PROMPT - EXTEND],
+             rng.integers(0, cfg.vocab, EXTEND, dtype=np.int32)])
+
+        # ---- publish: serve once, persisting snapshots; drain to COS ----
+        cl = make_cluster(wds[0], n=4)
+        fs_pub = make_fs(cl, consistency="weak")
+        CheckpointManager(fs_pub, "/bench/model").save(0, params,
+                                                       durable=True)
+        kv_pub = KVCacheStore(fs_pub, "/bench/kv", block_tokens=BLOCK_TOKENS)
+        eng_pub = ServingEngine(model, params, max_len=64, kvstore=kv_pub)
+        base_toks, _ = eng_pub.generate_with_reuse(prompt, max_new=MAX_NEW)
+        # store=False: the eval prompt's own (47-token) prefix must NOT be
+        # persisted, or every tier cell would find an exact hit instead of
+        # resuming from the shared 40-block
+        base_eval, _ = eng_pub.generate_with_reuse(prompt_eval,
+                                                   max_new=MAX_NEW,
+                                                   store=False)
+        cl.drain_dirty()
+        kv_stats = dict(kv_pub.stats)
+
+        # ---- tier cells on a scale-to-zero survivor cluster -------------
+        cl2 = _attach(cl, wds[1])
+        fs_a = make_fs(cl2, consistency="weak")
+        t0 = cl2.clock.now
+        params_a, params_bytes = ModelStore(fs_a, "/bench/model").load(
+            0, like=params)
+        params_cold_s = cl2.clock.now - t0
+        eng_a = ServingEngine(model, params_a, max_len=64,
+                              kvstore=KVCacheStore(fs_a, "/bench/kv",
+                                                   block_tokens=BLOCK_TOKENS))
+        cells = {"cold_cos": _ttft(cl2, eng_a, prompt_eval, "cold_cos",
+                                   quiet)}
+        fs_b = make_fs(cl2, consistency="weak", node=cl2.node_list()[1])
+        eng_b = ServingEngine(model, params_a, max_len=64,
+                              kvstore=KVCacheStore(fs_b, "/bench/kv",
+                                                   block_tokens=BLOCK_TOKENS))
+        cells["cluster_cache"] = _ttft(cl2, eng_b, prompt_eval,
+                                       "cluster_cache", quiet)
+        cells["node_cache"] = _ttft(cl2, eng_b, prompt_eval, "node_cache",
+                                    quiet)
+        # exact-hit premise: the full-prompt prefix is resident node-local
+        # (a replica re-serving a prompt it answered before) — warm it once
+        # unmeasured, then measure the resume
+        eng_b.generate_with_reuse(prompt, max_new=1, store=False)
+        cells["exact_hit"] = _ttft(cl2, eng_b, prompt, "exact_hit", quiet)
+        eng_none = ServingEngine(model, params_a, max_len=64)
+        cells["no_reuse"] = _ttft(cl2, eng_none, prompt_eval, "no_reuse",
+                                  quiet)
+
+        # ---- warm restart: params + hot KV + first token, end to end ----
+        cl3 = _attach(cl, wds[2])
+        fs_c = make_fs(cl3, consistency="weak")
+        t0 = cl3.clock.now
+        params_c, _ = ModelStore(fs_c, "/bench/model").load(0, like=params)
+        t_params = cl3.clock.now - t0
+        kv_c = KVCacheStore(fs_c, "/bench/kv", block_tokens=BLOCK_TOKENS)
+        hit = kv_c.lookup(prompt, cap=N_PROMPT - 1)
+        assert hit is not None
+        kv_c.get(hit[1])                       # hot-prefix preload
+        t_kv = cl3.clock.now - t0 - t_params
+        eng_c = ServingEngine(model, params_c, max_len=64, kvstore=kv_c)
+        warm_cell = _ttft(cl3, eng_c, prompt, "warm_restart", quiet)
+        warm = {"params_s": round(t_params, 6),
+                "params_bytes": params_bytes,
+                "kv_preload_s": round(t_kv, 6),
+                "kv_preload_bytes": kv_c.stats["get_bytes"],
+                "first_token_s": warm_cell["ttft_s"],
+                "restart_to_first_token_s": round(
+                    t_params + t_kv + warm_cell["ttft_s"], 6)}
+
+        # tokens must be identical everywhere reuse was in play
+        for name, cell in cells.items():
+            want = base_toks if name == "exact_hit" else base_eval
+            assert cell.pop("tokens") == want, f"token mismatch in {name}"
+        assert warm_cell["tokens"] == base_toks
+
+        cold = cells["cold_cos"]["ttft_s"]
+        rep = {
+            "model": "qwen3-0.6b (reduced)", "prompt_len": N_PROMPT,
+            "eval_shared_prefix": N_PROMPT - EXTEND,
+            "block_tokens": BLOCK_TOKENS, "max_new": MAX_NEW,
+            "prefill_tok_s": PREFILL_TOK_S,
+            "ttft": cells,
+            "warm_restart": warm,
+            "kv_store": {"prefixes": kv_stats["puts"],
+                         "put_bytes": kv_stats["put_bytes"]},
+            "speedup_vs_cold_pct": {
+                name: round(100 * (1 - c["ttft_s"] / cold), 1)
+                for name, c in cells.items() if name != "cold_cos"},
+            "tokens_match": True,
+        }
+        save_report("kv_reuse", rep)
+        if not quiet:
+            sp = rep["speedup_vs_cold_pct"]
+            print(f"[kv_reuse] exact_hit cuts TTFT {sp['exact_hit']:.1f}% "
+                  f"vs cold COS (node {sp['node_cache']:.1f}%, cluster "
+                  f"{sp['cluster_cache']:.1f}%)")
+        cl3.close()
+        cl2.close()
+        cl.close()
+        return rep
+    finally:
+        for wd in wds:
+            shutil.rmtree(wd, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,130 @@
+"""kv_smoke: regression gate for the KV-block data path (no JAX).
+
+Drives `serving.kvstore.KVCacheStore` with synthetic cache-shaped arrays:
+snapshot puts through the weak-consistency write path, a drain to COS, and
+tiered reads on a scale-to-zero survivor cluster (cold COS / cluster /
+node / single-layer ranged read).  Gated metrics (virtual seconds and RPC
+envelopes) fail `scripts/check.sh` on a >20% regression vs
+``reports/bench/kv_smoke_baseline.json``; refresh with
+``python -m benchmarks.kv_smoke --update-baseline`` after an intentional
+change (and say why in the commit).
+"""
+
+from __future__ import annotations
+
+import shutil
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.serving.kvstore import KVCacheStore
+
+from .common import Gate, gate_main, make_cluster, make_fs, save_report
+
+N_PER, KV_LEN = 4, 128
+PROMPT_LEN, BLOCK = 64, 16
+
+
+def _cache(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    return {
+        "slot0": {
+            "k": rng.standard_normal((N_PER, 1, 2, KV_LEN, 32)
+                                     ).astype(np.float16),
+            "v": rng.standard_normal((N_PER, 1, 2, KV_LEN, 32)
+                                     ).astype(np.float16),
+        },
+        "slot1": {
+            "conv": rng.standard_normal((N_PER, 1, 3, 96)
+                                        ).astype(np.float16),
+            "ssm": rng.standard_normal((N_PER, 1, 4, 16, 16)
+                                       ).astype(np.float32),
+        },
+    }
+
+
+def run(quiet: bool = False) -> dict:
+    wd1 = tempfile.mkdtemp(prefix="bench-kvs-1-")
+    wd2 = tempfile.mkdtemp(prefix="bench-kvs-2-")
+    try:
+        cl = make_cluster(wd1, n=3)
+        fs = make_fs(cl, consistency="weak")
+        kv = KVCacheStore(fs, "/bench/kv", block_tokens=BLOCK)
+        prompt = np.arange(1000, 1000 + PROMPT_LEN, dtype=np.int32)
+        t0 = cl.clock.now
+        for ln in kv.snapshot_lens(PROMPT_LEN):       # 16, 32, 48, 63
+            kv.put(prompt[:ln], _cache(ln))
+        put_s = cl.clock.now - t0
+        t0 = cl.clock.now
+        cl.drain_dirty()
+        drain_s = cl.clock.now - t0
+
+        # scale-to-zero survivor: same COS, empty cluster caches
+        cl2 = make_cluster(wd2, n=3)
+        cl2.cos = cl.cos
+        for s in cl2.servers.values():
+            s.cos = cl.cos
+        env0 = cl2.router.rpc_count
+        like = _cache(0)
+
+        fs_a = make_fs(cl2, consistency="weak")
+        kv_a = KVCacheStore(fs_a, "/bench/kv", block_tokens=BLOCK)
+        t0 = cl2.clock.now
+        ln, key = kv_a.lookup(prompt, cap=PROMPT_LEN - 1)
+        cache_a, _ = kv_a.get(key, like=like)
+        cold_s = cl2.clock.now - t0
+
+        fs_b = make_fs(cl2, consistency="weak", node=cl2.node_list()[1])
+        kv_b = KVCacheStore(fs_b, "/bench/kv", block_tokens=BLOCK)
+        t0 = cl2.clock.now
+        kv_b.get(kv_b.lookup(prompt, cap=PROMPT_LEN - 1)[1], like=like)
+        cluster_s = cl2.clock.now - t0
+        t0 = cl2.clock.now
+        kv_b.get(key, like=like)
+        node_s = cl2.clock.now - t0
+        t0 = cl2.clock.now
+        layer, _ = kv_b.get(key, layers={"slot0/k"})
+        layer_s = cl2.clock.now - t0
+
+        # correctness backstop: the tiers must return the publisher's bytes
+        src = _cache(ln)
+        np.testing.assert_array_equal(cache_a["slot0"]["k"],
+                                      src["slot0"]["k"])
+        np.testing.assert_array_equal(layer["slot0"]["k"], src["slot0"]["k"])
+        assert ln == PROMPT_LEN - 1
+
+        rep = {
+            "prefixes": kv.stats["puts"],
+            "put_bytes": kv.stats["put_bytes"],
+            "put_s": round(put_s, 6),
+            "drain_s": round(drain_s, 6),
+            "cold_get_s": round(cold_s, 6),
+            "cluster_get_s": round(cluster_s, 6),
+            "node_get_s": round(node_s, 6),
+            "layer_range_s": round(layer_s, 6),
+            "read_envelopes": cl2.router.rpc_count - env0,
+            "probes": kv_a.stats["probes"] + kv_b.stats["probes"],
+        }
+        save_report("kv_smoke", rep)
+        if not quiet:
+            print(f"[kv_smoke] put={put_s:.4f}s cold={cold_s:.4f}s "
+                  f"cluster={cluster_s:.4f}s node={node_s:.4f}s "
+                  f"layer={layer_s:.4f}s env={rep['read_envelopes']}")
+        cl2.close()
+        cl.close()
+        return rep
+    finally:
+        shutil.rmtree(wd1, ignore_errors=True)
+        shutil.rmtree(wd2, ignore_errors=True)
+
+
+GATES = [Gate("put_s"), Gate("cold_get_s"), Gate("node_get_s", slack=1e-4),
+         Gate("layer_range_s", slack=1e-4), Gate("read_envelopes")]
+BASELINE_KEYS = ["put_s", "cold_get_s", "node_get_s", "layer_range_s",
+                 "read_envelopes"]
+
+
+if __name__ == "__main__":
+    sys.exit(gate_main("kv_smoke", lambda: run(quiet=False),
+                       "kv_smoke_baseline.json", GATES, BASELINE_KEYS))

@@ -2,8 +2,15 @@
 # One-shot pre-commit gate: byte-compile everything, then run the tier-1
 # test suite (pyproject's addopts already excludes `slow` JAX smoke tests;
 # run those with `pytest -m slow` when touching kernels/models).
+#
+#   scripts/check.sh            full gate (compile, tests, smokes, docs)
+#   scripts/check.sh --docs     docs link check only
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--docs" ]]; then
+    exec python scripts/check_docs.py
+fi
 
 echo "== compileall =="
 python -m compileall -q src benchmarks tests
@@ -25,3 +32,12 @@ echo "== traffic-qos smoke =="
 # open-loop low-load + 2x-overload points; fails if tail latency, gold shed
 # rate, or best-effort shed rate regress vs traffic_smoke_baseline.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.traffic_smoke --check
+
+echo "== kv-cache smoke =="
+# KV-block put/drain + tiered gets on a scale-to-zero survivor; fails on a
+# >20% virtual-time or RPC-envelope regression vs kv_smoke_baseline.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kv_smoke --check
+
+echo "== docs links =="
+# broken intra-repo references (markdown links + backticked repo paths)
+python scripts/check_docs.py

@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo references in the repo's markdown docs.
+
+Two kinds of reference are checked:
+
+* markdown links ``[text](target)`` whose target is not an external URL or
+  a pure ``#anchor`` — the target (anchor stripped) must exist relative to
+  the referencing file or the repo root;
+* backtick spans that look like repo file paths (``core/loadgen.py``,
+  ``scripts/check.sh``, ``reports/bench/traffic.json``) — resolved against
+  the repo root, ``src/repro`` (module docs drop the package prefix),
+  ``src``, and the referencing file's directory; a bare filename
+  (``state.py``) passes if any file in the repo has that basename.
+
+Spans containing glob characters are skipped, as are PAPER.md / PAPERS.md /
+SNIPPETS.md (quoted external material), CHANGES.md (append-only history),
+and ISSUE.md (per-PR scratch).  Run via ``scripts/check.sh --docs`` or
+directly: ``python scripts/check_docs.py``.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_FILES = {"PAPER.md", "PAPERS.md", "SNIPPETS.md", "CHANGES.md",
+              "ISSUE.md"}
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+PATH_SPAN = re.compile(r"`([A-Za-z0-9_.\-/]+\.(?:py|sh|md|json|toml|txt))`")
+
+
+def repo_markdown_files() -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(REPO):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for fn in filenames:
+            if fn.endswith(".md") and fn not in SKIP_FILES:
+                out.append(os.path.join(dirpath, fn))
+    return sorted(out)
+
+
+def basename_index() -> set[str]:
+    names: set[str] = set()
+    for dirpath, dirnames, filenames in os.walk(REPO):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        names.update(filenames)
+    return names
+
+
+def resolve(target: str, md_dir: str) -> bool:
+    roots = [REPO, os.path.join(REPO, "src", "repro"),
+             os.path.join(REPO, "src"), md_dir]
+    return any(os.path.exists(os.path.join(r, target)) for r in roots)
+
+
+def check_file(path: str, basenames: set[str]) -> list[str]:
+    md_dir = os.path.dirname(path)
+    rel = os.path.relpath(path, REPO)
+    errs: list[str] = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for m in MD_LINK.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:",
+                                      "#")):
+                    continue
+                target = target.split("#", 1)[0]
+                if target and not resolve(target, md_dir):
+                    errs.append(f"{rel}:{lineno}: broken link ({target})")
+            for m in PATH_SPAN.finditer(line):
+                span = m.group(1)
+                if "*" in span or "<" in span:
+                    continue
+                if "/" in span:
+                    if not resolve(span, md_dir):
+                        errs.append(f"{rel}:{lineno}: missing path "
+                                    f"(`{span}`)")
+                elif span not in basenames:
+                    errs.append(f"{rel}:{lineno}: no file named `{span}` "
+                                f"in the repo")
+    return errs
+
+
+def main() -> int:
+    basenames = basename_index()
+    files = repo_markdown_files()
+    errs: list[str] = []
+    for path in files:
+        errs.extend(check_file(path, basenames))
+    if errs:
+        print("\n".join(errs), file=sys.stderr)
+        print(f"[docs] {len(errs)} broken reference(s) across "
+              f"{len(files)} markdown files", file=sys.stderr)
+        return 1
+    print(f"[docs] OK: {len(files)} markdown files, all intra-repo "
+          f"references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -249,6 +249,26 @@ class ObjcacheFS:
         finally:
             self.close(fh)
 
+    def read_file_range(self, path: str, off: int, length: int) -> bytes:
+        """Positioned whole-range read: open, read exactly [off, off+length)
+        (short only at EOF), close.  The block-granular read path — callers
+        with a segment table (e.g. `serving/kvstore.py` fetching one layer's
+        KV block) pay only for the bytes they name, while the client's
+        chunk-granular readahead still batches adjacent segments."""
+        fh = self.open(path, "r")
+        try:
+            out = bytearray()
+            pos, end = off, off + length
+            while pos < end:
+                blk = self.read(fh, pos, min(1 << 22, end - pos))
+                if not blk:
+                    break
+                out += blk
+                pos += len(blk)
+            return bytes(out)
+        finally:
+            self.close(fh)
+
     def read_file(self, path: str) -> bytes:
         fh = self.open(path, "r")
         try:

@@ -31,6 +31,26 @@ Pieces:
   fairness index per tenant and overall;
 * `fs_fingerprint` — end-state digest (namespace + sizes + content hashes)
   for deterministic-replay and metamorphic tests.
+
+Contracts the pieces rely on:
+
+* **Determinism is structural, not incidental.**  Each tenant draws from
+  its own ``default_rng([seed, tenant_index])`` substream, so adding or
+  reordering tenants never perturbs another tenant's arrivals; clients
+  take explicit ``client_id``s because the process-global counter's
+  decimal width leaks into staged-part key strings → payload bytes →
+  virtual transfer times.  Two clusters replaying the same schedule
+  reach bit-identical fingerprints.
+* **Arrival-charged admission clock.**  The runner calls
+  `Router.note_arrival(tenant, t_arrival)` before dispatching each op so
+  the router's GCRA bucket charges *every* envelope of the op at its
+  scheduled arrival, not at its post-queueing dispatch time — otherwise
+  backlog would mint refill credit and overload could never shed (the
+  full argument is in `net.py`'s module docstring).  Anything replaying
+  a schedule against a policed router must preserve this call.
+* **Shed means shed.**  An `AdmissionError` is recorded and the op is
+  never retried: open-loop load must not self-throttle, that being the
+  blind spot this module exists to remove.
 """
 
 from __future__ import annotations

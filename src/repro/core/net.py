@@ -15,6 +15,31 @@ name is a programming error (`UnknownRpcError`), not a silent `getattr`.
 The router also records per-method call counts, bytes, and virtual-time
 latency, both globally (`Router.method_stats`) and into the destination
 server's `stats` dict (`rpc.<method>.calls/bytes/vtime`).
+
+Admission control (QoS) lives at this layer too, because the envelope is
+the unit the fabric can police without understanding filesystem
+semantics.  `Router.set_admission` installs a per-tenant GCRA token
+bucket (`TenantQos`: ``rate_ops_s`` in *envelope* units — one fs-op is
+several envelopes, ~4.7 for the mixed strict workload — plus ``burst``
+and ``queue_depth``).  A conforming envelope passes untouched; an
+over-rate one is *delayed* until its conforming time, up to
+``queue_depth`` token intervals, beyond which it is *shed* as a typed
+`AdmissionError` (EAGAIN, carrying ``retry_after_s``) without consuming
+a token.  Untagged clients and the control-plane ``rpc_nodelist`` are
+never policed.
+
+The subtle part is *when* an envelope is charged.  An op queued behind a
+backlog issues its trailing envelopes at post-queueing virtual times; if
+the bucket charged those at dispatch time, the backlog itself would mint
+refill credit (time passed → tokens accrued) and an overloaded tenant
+would never shed.  Callers therefore pin each operation's charge time to
+its open-loop *arrival* via `Router.note_arrival`, and `_admit` converts
+the conforming-time wait into an incremental delay on top of whatever
+straggle the envelope already carries.  Admission delays compose with
+§5.2 dirty-page backpressure: the client diffs `Router.tenant_delay_s`
+around staging and stalls only for the remainder of a ``bp_delay`` hint,
+so the same virtual second is never charged twice.  Per-tenant
+admitted/delayed/shed counters live in `Router.tenant_stats`.
 """
 
 from __future__ import annotations

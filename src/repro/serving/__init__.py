@@ -1,3 +1,17 @@
-from .engine import ModelStore, ServingEngine
+"""Serving over objcache: param loading (`ModelStore`), the batched
+engine (`ServingEngine`), and KV-cache persistence (`KVCacheStore`).
 
-__all__ = ["ModelStore", "ServingEngine"]
+`engine` imports JAX; it is loaded lazily so the numpy-only
+`KVCacheStore` data path (used by `benchmarks/kv_smoke.py` in the
+pre-commit gate) stays importable without paying the JAX startup cost."""
+
+from .kvstore import KVCacheStore, prefix_key
+
+__all__ = ["KVCacheStore", "ModelStore", "ServingEngine", "prefix_key"]
+
+
+def __getattr__(name: str):
+    if name in ("ModelStore", "ServingEngine"):
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(name)

@@ -1,0 +1,287 @@
+"""KV-cache persistence over ObjcacheFS — inference state as a workload.
+
+The paper's serving story (§6.3, Fig. 11) moves *parameters* through the
+cache tiers; this module moves *inference state*.  ObjectCache (PAPERS.md,
+arXiv 2605.22850) shows that layerwise LLM KV caches retrieved from object
+storage are exactly the access shape an elastic filesystem cache
+accelerates: immutable-once-written blocks, keyed by prompt prefix, read
+back layer-at-a-time at the start of a request.  Writing them through
+`ObjcacheFS` means they inherit everything the data path already has —
+dirty tracking, background write-back (`core/flusher.py`), eviction to COS
+under cache pressure, migration on ring changes, and durable survival of a
+scale-to-zero drain — with no new protocol code.
+
+Layout per stored prefix (all paths under the store root, typically a
+mounted bucket directory)::
+
+    <root>/<key>/blocks.bin       # per-layer segments, concatenated
+    <root>/<key>/manifest.json    # tokens, cache_len, segment table
+
+``key`` is a hash of the exact token prefix.  ``blocks.bin`` holds one
+segment per (cache leaf, layer period) — the layerwise block granularity
+ObjectCache fetches — and the manifest records each segment's
+(offset, nbytes, dtype, shape), so a reader can fetch any single layer
+with one ranged read (`ObjcacheFS.read_file_range`).  The manifest is
+committed with the same write-then-rename discipline as
+`checkpoint/manager.py`: rename is a 2PC transaction, so a prefix either
+has a complete manifest or is invisible — a crashed writer never publishes
+a partial cache.
+
+Snapshot/lookup contract (why prefixes are stored at *block* lengths):
+SSM state (`models/mamba2.py`) is a cumulative recurrence — unlike an
+attention KV cache it cannot be truncated to a shorter prefix after the
+fact.  The store therefore saves snapshots only at agreed lengths
+(`snapshot_lens`: every ``block_tokens``-th position plus ``prompt_len-1``,
+the state that emits the first token), and `lookup` probes exactly those
+lengths, longest first.  Restoring a snapshot is bit-exact: segments are
+raw array bytes, and a zero-padded tail along the kv axis is invisible to
+`attention_decode`'s ``cache_len`` mask (and to an unwrapped ring buffer).
+
+This module is numpy-only on purpose: the benchmark gate
+(`benchmarks/kv_smoke.py`) exercises the data path without importing JAX.
+Caches are nested dicts whose leaves are arrays shaped
+``(n_periods, batch, ...)`` — the layout of `models.lm.init_cache` — and
+`put`/`get` move one batch row at a time.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+
+import numpy as np
+
+from ..core.fs import ObjcacheFS
+
+_BLOCKS = "blocks.bin"
+_MANIFEST = "manifest.json"
+
+
+def prefix_key(tokens) -> str:
+    """Content hash of a token prefix (dtype-pinned so python ints, int32
+    and int64 arrays of the same tokens all map to the same key)."""
+    raw = np.ascontiguousarray(np.asarray(tokens, np.int32)).tobytes()
+    return hashlib.sha1(raw).hexdigest()[:20]
+
+
+def _flat_items(tree, prefix: str = "") -> list[tuple[str, object]]:
+    """Nested-dict flatten with '/'-joined paths, sorted for a stable
+    segment order (no jax.tree dependency)."""
+    out: list[tuple[str, object]] = []
+    for k in sorted(tree):
+        v = tree[k]
+        path = f"{prefix}/{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.extend(_flat_items(v, path))
+        else:
+            out.append((path, v))
+    return out
+
+
+def _unflatten(items: dict[str, np.ndarray]) -> dict:
+    out: dict = {}
+    for path, arr in items.items():
+        cur = out
+        parts = path.split("/")
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = arr
+    return out
+
+
+def _fit(arr: np.ndarray, target_shape: tuple[int, ...], cache_len: int,
+         leaf: str) -> np.ndarray:
+    """Adapt a restored (n_periods, ...) leaf to `target_shape`.  At most
+    one axis may differ (the kv/time axis, when the reader's ``max_len``
+    differs from the writer's); resizing it is exact only while the first
+    ``cache_len`` positions are the only live ones, i.e. the cache has not
+    wrapped past the smaller of the two sizes."""
+    if arr.shape == tuple(target_shape):
+        return arr
+    diff = [i for i, (a, b) in enumerate(zip(arr.shape, target_shape))
+            if a != b]
+    if len(arr.shape) != len(target_shape) or len(diff) != 1:
+        raise ValueError(f"kv block {leaf!r}: stored shape {arr.shape} "
+                         f"incompatible with target {tuple(target_shape)}")
+    ax = diff[0]
+    lo = min(arr.shape[ax], target_shape[ax])
+    if cache_len > lo:
+        raise ValueError(
+            f"kv block {leaf!r}: cannot resize axis {ax} from "
+            f"{arr.shape[ax]} to {target_shape[ax]} with cache_len="
+            f"{cache_len} live positions (cache wrapped)")
+    out = np.zeros(target_shape, arr.dtype)
+    sel = [slice(None)] * arr.ndim
+    sel[ax] = slice(0, lo)
+    out[tuple(sel)] = arr[tuple(sel)]
+    return out
+
+
+class KVCacheStore:
+    """Prefix-keyed KV/SSM-state block store over an `ObjcacheFS` mount.
+
+    One store instance is one serving replica's view; different replicas
+    (different FS clients, possibly different nodes) sharing a root see
+    each other's prefixes through the cluster cache — that sharing is the
+    cluster-cache tier of `benchmarks/kv_reuse.py`.
+    """
+
+    def __init__(self, fs: ObjcacheFS, root: str,
+                 block_tokens: int = 16) -> None:
+        assert block_tokens >= 1
+        self.fs = fs
+        self.root = root.rstrip("/")
+        self.block_tokens = block_tokens
+        # counters surfaced by benchmarks: puts/put_bytes on the write side,
+        # hits/misses/probes on the lookup side, get_bytes on the read side
+        self.stats: dict[str, int] = {
+            "puts": 0, "put_bytes": 0, "dup_puts": 0,
+            "hits": 0, "misses": 0, "probes": 0, "gets": 0, "get_bytes": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # snapshot/lookup length contract
+    # ------------------------------------------------------------------
+    def snapshot_lens(self, prompt_len: int) -> list[int]:
+        """Prefix lengths worth persisting while prefilling a prompt of
+        `prompt_len` tokens: every block boundary (shareable with any
+        request whose prompt continues past it) plus ``prompt_len - 1``
+        (the exact-hit state that emits this prompt's first token)."""
+        lens = {k for k in range(self.block_tokens, prompt_len,
+                                 self.block_tokens)}
+        if prompt_len > 1:
+            lens.add(prompt_len - 1)
+        return sorted(lens)
+
+    def candidate_lens(self, cap: int) -> list[int]:
+        """Lengths `lookup` probes, longest first: `cap` itself plus every
+        block boundary below it.  O(cap / block_tokens) existence probes
+        bound the metadata cost of a miss."""
+        out = {cap} if cap >= 1 else set()
+        out.update(k for k in range(self.block_tokens, cap,
+                                    self.block_tokens))
+        return sorted(out, reverse=True)
+
+    # ------------------------------------------------------------------
+    # store / fetch
+    # ------------------------------------------------------------------
+    def _dir(self, key: str) -> str:
+        return f"{self.root}/{key}"
+
+    def has(self, tokens) -> bool:
+        return self.fs.exists(f"{self._dir(prefix_key(tokens))}/{_MANIFEST}")
+
+    def put(self, tokens, cache: dict, batch_index: int = 0) -> dict | None:
+        """Persist one batch row of `cache` keyed by the exact `tokens`
+        prefix.  Returns the manifest, or None if this prefix is already
+        stored (first writer wins; blocks are immutable once published)."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if tokens.size == 0:
+            return None
+        key = prefix_key(tokens)
+        d = self._dir(key)
+        if self.fs.exists(f"{d}/{_MANIFEST}"):
+            self.stats["dup_puts"] += 1
+            return None
+        segs: list[dict] = []
+        blobs: list[bytes] = []
+        off = 0
+        for leaf, arr in _flat_items(cache):
+            arr = np.asarray(arr)
+            if arr.ndim < 2 or batch_index >= arr.shape[1]:
+                raise ValueError(f"cache leaf {leaf!r}: expected "
+                                 f"(n_periods, batch, ...), got {arr.shape}")
+            row = np.ascontiguousarray(arr[:, batch_index])
+            for p in range(row.shape[0]):          # one block per layer period
+                raw = np.ascontiguousarray(row[p]).tobytes()
+                segs.append({"leaf": leaf, "period": p, "offset": off,
+                             "nbytes": len(raw), "dtype": str(arr.dtype),
+                             "shape": list(row.shape[1:])})
+                blobs.append(raw)
+                off += len(raw)
+        self.fs.makedirs(d)
+        self.fs.write_file(f"{d}/{_BLOCKS}", b"".join(blobs))
+        manifest = {"key": key, "tokens": tokens.tolist(),
+                    "cache_len": int(tokens.size), "nbytes": off,
+                    "n_blocks": len(segs), "layers": segs}
+        tmp = f"{d}/.manifest.tmp"
+        self.fs.write_file(tmp, json.dumps(manifest).encode())
+        self.fs.rename(tmp, f"{d}/{_MANIFEST}")   # 2PC publish point
+        self.stats["puts"] += 1
+        self.stats["put_bytes"] += off
+        return manifest
+
+    def lookup(self, tokens, cap: int | None = None
+               ) -> tuple[int, str] | None:
+        """Longest stored prefix of `tokens`, probing only the snapshot
+        lengths.  `cap` bounds the usable length — a serving engine passes
+        ``len(prompt) - 1`` because the final prompt token must always be
+        fed through decode to produce first-token logits.  Returns
+        ``(length, key)`` or None."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        cap = tokens.size if cap is None else min(cap, tokens.size)
+        for ln in self.candidate_lens(cap):
+            self.stats["probes"] += 1
+            key = prefix_key(tokens[:ln])
+            if self.fs.exists(f"{self._dir(key)}/{_MANIFEST}"):
+                self.stats["hits"] += 1
+                return ln, key
+        self.stats["misses"] += 1
+        return None
+
+    def manifest(self, key: str) -> dict:
+        return json.loads(self.fs.read_file(f"{self._dir(key)}/{_MANIFEST}"))
+
+    def get(self, key: str, like: dict | None = None,
+            layers: set[str] | None = None) -> tuple[dict, dict]:
+        """Fetch stored blocks for `key` as a batch-1 cache (nested dict of
+        numpy arrays shaped ``(n_periods, 1, ...)``).
+
+        `like` (a cache pytree of the same structure, e.g. the engine's
+        freshly initialized cache) pins target shapes/dtypes: kv axes are
+        zero-padded or sliced to the reader's ``max_len`` where that is
+        exact (see `_fit`), and a dtype mismatch is an error, not a cast —
+        a silently converted cache would break bit-determinism.
+
+        `layers` optionally restricts the fetch to a subset of leaf paths
+        (e.g. ``{"slot0/k"}``); each selected segment is one ranged read,
+        the layerwise-retrieval pattern of ObjectCache.  Returns
+        ``(cache, manifest)``."""
+        man = self.manifest(key)
+        path = f"{self._dir(key)}/{_BLOCKS}"
+        per_leaf: dict[str, dict[int, np.ndarray]] = {}
+        want = [s for s in man["layers"]
+                if layers is None or s["leaf"] in layers]
+        if layers is None:
+            # whole-prefix restore: one sequential read of the blocks file
+            raw_all = self.fs.read_file(path)
+            raws = [raw_all[s["offset"]:s["offset"] + s["nbytes"]]
+                    for s in want]
+        else:
+            raws = [self.fs.read_file_range(path, s["offset"], s["nbytes"])
+                    for s in want]
+        for seg, raw in zip(want, raws):
+            if len(raw) != seg["nbytes"]:
+                raise ValueError(
+                    f"kv block {seg['leaf']}[{seg['period']}] of {key}: "
+                    f"read {len(raw)} bytes, manifest says {seg['nbytes']}")
+            arr = np.frombuffer(raw, dtype=seg["dtype"]).reshape(seg["shape"])
+            per_leaf.setdefault(seg["leaf"], {})[seg["period"]] = arr
+            self.stats["get_bytes"] += len(raw)
+        self.stats["gets"] += 1
+        like_flat = dict(_flat_items(like)) if like is not None else {}
+        leaves: dict[str, np.ndarray] = {}
+        for leaf, periods in per_leaf.items():
+            stacked = np.stack([periods[p] for p in sorted(periods)])
+            tgt = like_flat.get(leaf)
+            if tgt is not None:
+                tgt = np.asarray(tgt)
+                if str(tgt.dtype) != str(stacked.dtype):
+                    raise ValueError(
+                        f"kv block {leaf!r}: stored dtype {stacked.dtype} "
+                        f"!= cache dtype {tgt.dtype}")
+                # target per-row shape: drop the batch axis
+                row_shape = (tgt.shape[0],) + tuple(tgt.shape[2:])
+                stacked = _fit(stacked, row_shape, man["cache_len"], leaf)
+            leaves[leaf] = stacked[:, None]        # re-insert batch axis
+        return _unflatten(leaves), man

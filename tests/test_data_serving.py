@@ -1,7 +1,10 @@
 """Data pipeline + serving engine over objcache."""
 
+import json
+
 import jax
 import numpy as np
+import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_reduced
@@ -55,6 +58,45 @@ def test_model_store_and_engine_generate(workdir):
     outs = engine.generate(prompts, max_new=4)
     assert len(outs) == 3 and all(len(o) == 4 for o in outs)
     assert all(0 <= t < cfg.vocab for o in outs for t in o)
+    cl.close()
+
+
+def test_model_store_load_missing_leaf_and_dtype_mismatch(workdir):
+    """A manifest that drops a leaf or lies about a dtype must fail loudly
+    (named leaf in the message), never deserialize garbage."""
+    cl = make_cluster(workdir)
+    fs = make_fs(cl, consistency="weak")
+    cfg = get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    state, _ = train_state_init(model, jax.random.PRNGKey(0), max_seq=32)
+    CheckpointManager(fs, "/b/models/m").save(0, state.params)
+    store = ModelStore(fs, "/b/models/m")
+    man_path = "/b/models/m/step_0/manifest.json"
+    manifest = json.loads(fs.read_file(man_path))
+    victim = sorted(manifest["leaves"])[0]
+
+    # missing manifest leaf
+    broken = {"step": 0, "leaves": {k: v for k, v in
+                                    manifest["leaves"].items()
+                                    if k != victim}}
+    fs.write_file(man_path, json.dumps(broken).encode())
+    with pytest.raises(ValueError, match="missing leaves") as ei:
+        store.load(0, like=state.params)
+    assert victim in str(ei.value)
+
+    # dtype mismatch: manifest claims a wider dtype than the bytes on disk
+    lied = json.loads(json.dumps(manifest))
+    lied["leaves"][victim]["dtype"] = "float64"
+    fs.write_file(man_path, json.dumps(lied).encode())
+    with pytest.raises(ValueError, match="bytes on disk"):
+        store.load(0, like=state.params)
+
+    # restored manifest loads fine again
+    fs.write_file(man_path, json.dumps(manifest).encode())
+    params, _ = store.load(0, like=state.params)
+    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
     cl.close()
 
 

@@ -1,0 +1,233 @@
+"""KV-cache persistence over ObjcacheFS (serving/kvstore.py).
+
+Numpy-only store semantics (hashing, snapshot/lookup contract, bit-exact
+round-trips, shape adaptation, layer-ranged reads) plus the JAX serving
+integration: the same prompt must emit identical tokens with and without
+KV-prefix reuse, including across a simulated scale-down/warm-restart."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving.kvstore import KVCacheStore, prefix_key
+from conftest import make_cluster, make_fs
+
+
+def _synthetic_cache(nper=2, batch=2, kv_len=32, seed=0):
+    """A cache-shaped pytree mirroring models.lm.init_cache: an attention
+    slot (bf16-ish halves) and an SSM slot (f32 state)."""
+    rng = np.random.default_rng(seed)
+    return {
+        "slot0": {
+            "k": rng.standard_normal((nper, batch, 2, kv_len, 8)
+                                     ).astype(np.float16),
+            "v": rng.standard_normal((nper, batch, 2, kv_len, 8)
+                                     ).astype(np.float16),
+        },
+        "slot1": {
+            "conv": rng.standard_normal((nper, batch, 3, 24)
+                                        ).astype(np.float16),
+            "ssm": rng.standard_normal((nper, batch, 4, 8, 8)
+                                       ).astype(np.float32),
+        },
+    }
+
+
+def test_prefix_key_dtype_stable():
+    toks = [5, 1, 400, 7]
+    assert prefix_key(toks) == prefix_key(np.asarray(toks, np.int64))
+    assert prefix_key(toks) == prefix_key(np.asarray(toks, np.int32))
+    assert prefix_key(toks) != prefix_key(toks[:-1])
+
+
+def test_snapshot_and_candidate_lens():
+    kv = KVCacheStore.__new__(KVCacheStore)
+    kv.block_tokens = 16
+    assert kv.snapshot_lens(48) == [16, 32, 47]
+    assert kv.snapshot_lens(16) == [15]
+    assert kv.snapshot_lens(1) == []
+    assert kv.candidate_lens(47) == [47, 32, 16]
+    assert kv.candidate_lens(16) == [16]
+    assert kv.candidate_lens(0) == []
+
+
+def test_put_get_roundtrip_bitexact(workdir):
+    cl = make_cluster(workdir)
+    fs = make_fs(cl, consistency="weak")
+    kv = KVCacheStore(fs, "/b/kv", block_tokens=16)
+    cache = _synthetic_cache(kv_len=32)
+    toks = np.arange(32, dtype=np.int32)
+    man = kv.put(toks, cache, batch_index=1)
+    assert man is not None and man["cache_len"] == 32
+    # second put of the same prefix is a no-op (immutable blocks)
+    assert kv.put(toks, cache, batch_index=0) is None
+    got, man2 = kv.get(man["key"], like=cache)
+    assert man2["nbytes"] == man["nbytes"]
+    for path in ("slot0/k", "slot0/v", "slot1/conv", "slot1/ssm"):
+        a, b = path.split("/")
+        stored = got[a][b]
+        assert stored.shape[1] == 1            # batch-1 restore
+        np.testing.assert_array_equal(stored[:, 0], cache[a][b][:, 1])
+    cl.close()
+
+
+def test_lookup_longest_prefix_and_cap(workdir):
+    cl = make_cluster(workdir)
+    fs = make_fs(cl, consistency="weak")
+    kv = KVCacheStore(fs, "/b/kv", block_tokens=16)
+    cache = _synthetic_cache(kv_len=64)
+    prompt = np.arange(100, 148, dtype=np.int32)        # 48 tokens
+    for ln in kv.snapshot_lens(48):                      # 16, 32, 47
+        kv.put(prompt[:ln], cache)
+    assert kv.lookup(prompt, cap=47) == (47, prefix_key(prompt[:47]))
+    # a different continuation past 32 still reuses the 32-block
+    other = np.concatenate([prompt[:40], np.full(8, 9999, np.int32)])
+    assert kv.lookup(other, cap=39)[0] == 32
+    # diverging before the first block: miss
+    assert kv.lookup(np.full(48, 7, np.int32), cap=47) is None
+    cl.close()
+
+
+def test_get_adapts_kv_axis_and_rejects_bad(workdir):
+    cl = make_cluster(workdir)
+    fs = make_fs(cl, consistency="weak")
+    kv = KVCacheStore(fs, "/b/kv", block_tokens=8)
+    cache = _synthetic_cache(kv_len=32)
+    toks = np.arange(16, dtype=np.int32)   # cache_len 16 < kv_len 32
+    man = kv.put(toks, cache)
+    # reader with a larger max_len: kv axis zero-padded, live range exact
+    bigger = _synthetic_cache(kv_len=48, seed=1)
+    got, _ = kv.get(man["key"], like=bigger)
+    assert got["slot0"]["k"].shape[3] == 48
+    np.testing.assert_array_equal(got["slot0"]["k"][:, 0, :, :32],
+                                  cache["slot0"]["k"][:, 0])
+    assert not got["slot0"]["k"][:, 0, :, 32:].any()
+    # reader with a smaller max_len that still covers cache_len: sliced
+    smaller = _synthetic_cache(kv_len=24, seed=2)
+    got, _ = kv.get(man["key"], like=smaller)
+    assert got["slot0"]["k"].shape[3] == 24
+    # wrapped cache (cache_len == kv_len) cannot be resized
+    full = kv.put(np.arange(32, dtype=np.int32), cache)
+    with pytest.raises(ValueError, match="resize"):
+        kv.get(full["key"], like=smaller)
+    # dtype mismatch is an error, not a cast
+    wrong = _synthetic_cache(kv_len=32)
+    wrong["slot1"]["ssm"] = wrong["slot1"]["ssm"].astype(np.float16)
+    with pytest.raises(ValueError, match="dtype"):
+        kv.get(man["key"], like=wrong)
+    cl.close()
+
+
+def test_layer_subset_uses_ranged_reads(workdir):
+    cl = make_cluster(workdir)
+    fs = make_fs(cl, consistency="weak")
+    kv = KVCacheStore(fs, "/b/kv")
+    cache = _synthetic_cache(kv_len=32)
+    man = kv.put(np.arange(8, dtype=np.int32), cache)
+    got, _ = kv.get(man["key"], layers={"slot1/ssm"})
+    assert list(got) == ["slot1"] and list(got["slot1"]) == ["ssm"]
+    np.testing.assert_array_equal(got["slot1"]["ssm"][:, 0],
+                                  cache["slot1"]["ssm"][:, 0])
+    # the subset read fetched only that leaf's blocks
+    ssm_bytes = cache["slot1"]["ssm"][:, 0].nbytes
+    assert kv.stats["get_bytes"] == ssm_bytes < man["nbytes"]
+    cl.close()
+
+
+def test_manifest_published_atomically(workdir):
+    """A prefix directory without a renamed-in manifest is invisible."""
+    cl = make_cluster(workdir)
+    fs = make_fs(cl, consistency="weak")
+    kv = KVCacheStore(fs, "/b/kv")
+    toks = np.arange(8, dtype=np.int32)
+    key = prefix_key(toks)
+    fs.makedirs(f"/b/kv/{key}")
+    fs.write_file(f"/b/kv/{key}/blocks.bin", b"garbage")
+    assert kv.lookup(toks, cap=8) is None
+    assert not kv.has(toks)
+    cl.close()
+
+
+def test_read_file_range(fs):
+    data = bytes(range(256)) * 2048            # 512 KiB, 2 chunks
+    fs.write_file("/b/rng.bin", data)
+    assert fs.read_file_range("/b/rng.bin", 0, 16) == data[:16]
+    off = 300_000                               # crosses the chunk boundary
+    assert fs.read_file_range("/b/rng.bin", off - 10, 50) == \
+        data[off - 10:off + 40]
+    # short read at EOF, not an error
+    assert fs.read_file_range("/b/rng.bin", len(data) - 8, 64) == data[-8:]
+
+
+# ---------------------------------------------------------------------------
+# JAX serving integration: reuse must not change emitted tokens
+# ---------------------------------------------------------------------------
+def _engine(arch, fs, kv_root=None, max_len=64, block_tokens=8):
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.serving import ServingEngine
+
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), max_seq=max_len)
+    kv = KVCacheStore(fs, kv_root, block_tokens=block_tokens) \
+        if kv_root else None
+    return ServingEngine(model, params, max_len=max_len, kvstore=kv), cfg
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-370m"])
+def test_reuse_tokens_identical(workdir, arch):
+    cl = make_cluster(workdir)
+    fs = make_fs(cl, consistency="weak")
+    engine, cfg = _engine(arch, fs, kv_root="/b/kv")
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, size=21, dtype=np.int32)
+
+    base = engine.generate([prompt], max_new=6)[0]       # no kvstore path
+    cold, i_cold = engine.generate_with_reuse(prompt, max_new=6)
+    assert cold == base
+    assert i_cold["reused_len"] == 0 and i_cold["kv_stored"] > 0
+
+    warm, i_warm = engine.generate_with_reuse(prompt, max_new=6)
+    assert warm == base
+    assert i_warm["exact_hit"] and i_warm["reused_len"] == len(prompt) - 1
+    assert i_warm["prefill_steps"] == 1
+
+    # a longer prompt sharing the prefix resumes from a block boundary
+    longer = np.concatenate([prompt,
+                             rng.integers(0, cfg.vocab, 9, dtype=np.int32)])
+    ref = engine.generate([longer], max_new=6)[0]
+    got, i_long = engine.generate_with_reuse(longer, max_new=6)
+    assert got == ref
+    assert i_long["reused_len"] >= 16        # ≥ the highest shared block
+    cl.close()
+
+
+def test_warm_restart_after_scale_down(workdir):
+    """Fig. 11 shape for inference state: a replica restarted over the same
+    COS bucket reloads hot KV blocks and emits the same tokens."""
+    import jax  # noqa: F401  (keeps the slow import grouped here)
+
+    cl = make_cluster(workdir)
+    fs = make_fs(cl, consistency="weak")
+    engine, cfg = _engine("qwen3-0.6b", fs, kv_root="/b/kv")
+    prompt = np.random.default_rng(5).integers(0, cfg.vocab, 17,
+                                               dtype=np.int32)
+    base, _ = engine.generate_with_reuse(prompt, max_new=5)
+    assert cl.drain_dirty() >= 0             # KV blocks durable in COS
+    for nm in list(cl.node_list()):          # simulated scale-down
+        cl.remove_node(nm)
+
+    cl2 = make_cluster(workdir + "-2", n=3)
+    cl2.cos = cl.cos
+    for s in cl2.servers.values():
+        s.cos = cl.cos
+    fs2 = make_fs(cl2, consistency="weak")
+    engine2, _ = _engine("qwen3-0.6b", fs2, kv_root="/b/kv")
+    got, info = engine2.generate_with_reuse(prompt, max_new=5)
+    assert got == base
+    assert info["exact_hit"] and info["kv_read_bytes"] > 0
+    cl2.close()
+    cl.close()
