@@ -17,8 +17,9 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import (BucketMount, ClientConfig, Cluster, HardwareModel,
-                        ObjcacheClient, ObjcacheFS, ServerConfig)
+from repro.core import (BucketMount, ClientConfig, Cluster, CosStore,
+                        HardwareModel, NvmeStore, ObjcacheClient, ObjcacheFS,
+                        ServerConfig, SimClock, TierPolicy, TieredStore)
 
 REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
                           "bench")
@@ -34,9 +35,12 @@ def blob(n: int, seed: int = 0) -> bytes:
 
 def make_cluster(workdir: str, n: int, chunk: int = CHUNK,
                  bucket: str = "bench", hw: HardwareModel | None = None,
-                 cfg: ServerConfig | None = None) -> Cluster:
-    cl = Cluster(workdir, [BucketMount(bucket, bucket)], hw=hw,
-                 cfg=cfg or ServerConfig(chunk_size=chunk))
+                 cfg: ServerConfig | None = None,
+                 backends: dict | None = None, backend: str = "cos",
+                 clock: SimClock | None = None) -> Cluster:
+    cl = Cluster(workdir, [BucketMount(bucket, bucket, backend=backend)],
+                 hw=hw, cfg=cfg or ServerConfig(chunk_size=chunk),
+                 clock=clock, backends=backends)
     cl.start(n)
     return cl
 
@@ -44,11 +48,17 @@ def make_cluster(workdir: str, n: int, chunk: int = CHUNK,
 @contextlib.contextmanager
 def bench_env(prefix: str, n: int, chunk: int = CHUNK, bucket: str = "bench",
               hw: HardwareModel | None = None,
-              cfg: ServerConfig | None = None):
+              cfg: ServerConfig | None = None,
+              backends: dict | None = None, backend: str = "cos",
+              clock: SimClock | None = None):
     """Temp workdir + started cluster, torn down on exit — the setup every
-    benchmark used to hand-roll (mkdtemp / close / rmtree)."""
+    benchmark used to hand-roll (mkdtemp / close / rmtree).  Pass
+    ``backends={"tiered": store}, backend="tiered"`` to mount the bench
+    bucket on a pluggable backend (core/tiering.py) instead of default COS;
+    share a pre-built ``clock`` so backend lanes and cluster time agree."""
     wd = tempfile.mkdtemp(prefix=prefix)
-    cl = make_cluster(wd, n=n, chunk=chunk, bucket=bucket, hw=hw, cfg=cfg)
+    cl = make_cluster(wd, n=n, chunk=chunk, bucket=bucket, hw=hw, cfg=cfg,
+                      backends=backends, backend=backend, clock=clock)
     try:
         yield cl
     finally:
@@ -149,6 +159,78 @@ def fastpath_section(n_nodes: int = 4, n_dirs: int = 4,
     out["meta_p99_reduction_pct"] = round(
         100 * (1 - on["meta_p99_ms"] / max(off["meta_p99_ms"], 1e-9)), 1)
     return out
+
+
+def make_tier(clock: SimClock, hw: HardwareModel | None = None,
+              nvme_mb: int = 64, promote_min_hits: int = 2,
+              writeback: bool = True) -> TieredStore:
+    """Standard two-tier store for the benchmarks: bounded local-NVMe cache
+    over an unbounded durable S3-like base (see docs/STORAGE.md)."""
+    hw = hw or HardwareModel()
+    return TieredStore([NvmeStore(clock, capacity_bytes=nvme_mb << 20),
+                        CosStore(clock, hw)], clock,
+                       TierPolicy(promote_min_hits=promote_min_hits,
+                                  writeback=writeback))
+
+
+def tier_sweep_section(n_nodes: int = 4, n_files: int = 8,
+                       file_kb: int = 2560, nvme_mb: int = 64) -> dict:
+    """Cold/warm/hot read sweep over a tiered bucket mount.
+
+    One TieredStore (NVMe cache over durable S3-like base) is shared by two
+    consecutive cluster generations reading the same object set:
+
+    * cold — first generation, nothing cached anywhere: every chunk is a
+      ranged GET against the durable base, and repeated hits on each key
+      trigger promotion into the NVMe tier.
+    * warm — second generation (fresh cluster cache) over the same backend:
+      chunk fills are served by the promoted NVMe copies.
+    * hot  — re-read within a generation: chunks are cluster-cache resident,
+      no backend traffic at all.
+
+    Files are deliberately larger than the chunk size so a single cold file
+    read produces enough per-key GETs to cross ``promote_min_hits``; the
+    NVMe tier must hold the whole working set, because a sequential scan
+    over a too-small LRU cache thrashes — every file then pays one base GET
+    for its first chunk and, with readahead firing a file's chunk fills in
+    parallel, that one GET dominates the file latency and erases the warm
+    win (capacity-pressure behaviour is pinned by tests/test_tiering.py
+    instead)."""
+    clock = SimClock()
+    tier = make_tier(clock, nvme_mb=nvme_mb)
+    total = 0
+    for i in range(n_files):
+        data = blob(file_kb << 10, i)
+        total += len(data)
+        tier.base.put_object("bench", f"f{i}.bin", data)
+
+    def generation(label: str) -> tuple[float, float]:
+        with bench_env(f"bench-tier-{label}-", n=n_nodes,
+                       backends={"tiered": tier}, backend="tiered",
+                       clock=clock) as cl:
+            fs = make_fs(cl)
+            t0 = cl.clock.now
+            for i in range(n_files):
+                fs.read_file(f"/bench/f{i}.bin")
+            first = cl.clock.now - t0
+            t0 = cl.clock.now
+            for i in range(n_files):
+                fs.read_file(f"/bench/f{i}.bin")
+            resident = cl.clock.now - t0
+        return first, resident
+
+    cold_s, hot_s = generation("cold")
+    warm_s, _ = generation("warm")
+    stats = tier.stats()
+    return {
+        "files": n_files, "file_kb": file_kb, "total_mb": round(total / 1e6, 1),
+        "nvme_mb": nvme_mb, "nodes": n_nodes,
+        "cold_s": round(cold_s, 6), "warm_s": round(warm_s, 6),
+        "hot_s": round(hot_s, 6),
+        "warm_speedup": round(cold_s / max(warm_s, 1e-9), 2),
+        "hot_speedup": round(cold_s / max(hot_s, 1e-9), 2),
+        "tier": stats,
+    }
 
 
 # -------------------------------------------------------------------------

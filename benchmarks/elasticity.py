@@ -14,7 +14,7 @@ import tempfile
 import numpy as np
 
 from .common import blob, fastpath_section, make_cluster, make_fs, \
-    rpc_summary, save_report
+    rpc_summary, save_report, tier_sweep_section
 
 N_NODES = 12
 N_FILES = 128
@@ -116,6 +116,16 @@ def run(quiet: bool = False) -> dict:
     # ---- before/after: metadata fast paths (leases + batching), with one
     # node join so the migration meta-handoff coalescing is visible ---------
     rep["fastpath"] = fastpath_section(n_nodes=6, n_dirs=8, migrate=True)
+    # ---- cold/warm/hot read sweep over a tiered (NVMe-over-COS) mount -----
+    # elasticity angle: the tier backend outlives cluster generations, so a
+    # scale-to-zero + restart pays warm NVMe reads instead of cold COS GETs
+    rep["tier_sweep"] = tier_sweep_section(n_nodes=6, n_files=16)
+    if not quiet:
+        ts = rep["tier_sweep"]
+        print(f"[tier] cold {ts['cold_s']:.3f}s -> warm {ts['warm_s']:.3f}s "
+              f"({ts['warm_speedup']}x) -> hot {ts['hot_s']:.3f}s "
+              f"({ts['hot_speedup']}x) | promotions "
+              f"{ts['tier']['promotions']}")
     save_report("fig13_14_elasticity", rep)
     if not quiet:
         print(f"[fig13] up-dirty   "

@@ -1,0 +1,108 @@
+"""Tiered-storage smoke: cold/warm/hot read sweep + write-back durability
+vs a checked-in virtual-time baseline.
+
+Run by `scripts/check.sh` as a perf regression gate for the pluggable
+backend layer (`core/cos.py`) and the tiering policy (`core/tiering.py`):
+
+* a cold/warm/hot sweep over a two-tier (NVMe over S3-like) bucket mount —
+  cold reads hit the durable base and promote, warm reads are served from
+  the promoted NVMe copies, hot reads are cluster-cache resident;
+* a write-back pass: sub-chunk files written through the filesystem land on
+  the NVMe tier tier-dirty, then `scale_to_zero` must push every dirty
+  byte to the durable base (`tier_dirty_after` is gated at exactly 0).
+
+A >20% virtual-time regression on any sweep point, or any tier-dirty byte
+surviving zero-scale, fails the check (exit 1).
+
+    PYTHONPATH=src python -m benchmarks.tier_smoke --check
+    PYTHONPATH=src python -m benchmarks.tier_smoke --update-baseline
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import SimClock
+
+from .common import (Gate, bench_env, blob, gate_main, make_fs, make_tier,
+                     save_report, tier_sweep_section)
+
+N_NODES = 4
+WB_FILES = 24
+WB_DIRS = 4
+
+GATES = [
+    Gate("sweep.cold_s"),
+    Gate("sweep.warm_s"),
+    Gate("sweep.hot_s"),
+    Gate("writeback.drain_s"),
+    # absolute gate: no tier-dirty byte may survive scale-to-zero
+    Gate("writeback.tier_dirty_after", tolerance=0.0),
+]
+
+
+def _writeback_section() -> dict:
+    """Sub-chunk files written through the filesystem: the persisting
+    transaction takes the PutObject fast path for colocated single-chunk
+    inodes, so those puts land on the NVMe tier tier-dirty (write-back);
+    multi-owner files take the MPU path straight to the durable base.
+    `scale_to_zero` must then demote every tier-dirty byte before the
+    cluster disappears."""
+    clock = SimClock()
+    tier = make_tier(clock, nvme_mb=32)
+    with bench_env("bench-tier-wb-", n=N_NODES, chunk=1 << 20,
+                   backends={"tiered": tier}, backend="tiered",
+                   clock=clock) as cl:
+        fs = make_fs(cl)
+        rng = np.random.default_rng(7)
+        for d in range(WB_DIRS):
+            fs.makedirs(f"/bench/d{d}")
+        total = 0
+        for i in range(WB_FILES):
+            sz = int(rng.integers(64, 512)) << 10   # sub-chunk: <= 512 KiB
+            total += sz
+            fs.write_file(f"/bench/d{i % WB_DIRS}/f{i}.bin", blob(sz, i))
+        t0 = cl.clock.now
+        cl.drain_dirty(max_rounds=32)
+        dirty_after_drain = tier.tier_dirty_bytes()
+        cl.scale_to_zero()
+        drain_s = cl.clock.now - t0
+    stats = tier.stats()
+    return {
+        "files": WB_FILES, "total_mb": round(total / 1e6, 1),
+        "drain_s": round(drain_s, 6),
+        "tier_dirty_after_drain": dirty_after_drain,
+        "tier_dirty_after": tier.tier_dirty_bytes(),
+        "durable_objects": tier.base.object_count("bench"),
+        "tier": stats,
+    }
+
+
+def run(quiet: bool = False) -> dict:
+    rep = {
+        "sweep": tier_sweep_section(n_nodes=N_NODES),
+        "writeback": _writeback_section(),
+    }
+    save_report("tier_smoke", rep)
+    if not quiet:
+        sw, wb = rep["sweep"], rep["writeback"]
+        print(f"[tier-smoke] cold {sw['cold_s']:.3f}s -> warm "
+              f"{sw['warm_s']:.3f}s ({sw['warm_speedup']}x) -> hot "
+              f"{sw['hot_s']:.3f}s ({sw['hot_speedup']}x) | writeback "
+              f"{wb['files']} files drain {wb['drain_s']:.3f}s "
+              f"tier-dirty-after {wb['tier_dirty_after']}")
+    return rep
+
+
+def main() -> int:
+    return gate_main("tier-smoke", run, "tier_smoke_baseline.json", GATES,
+                     baseline_keys=["sweep.cold_s", "sweep.warm_s",
+                                    "sweep.hot_s", "writeback.files",
+                                    "writeback.drain_s",
+                                    "writeback.tier_dirty_after"])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

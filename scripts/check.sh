@@ -38,6 +38,12 @@ echo "== kv-cache smoke =="
 # >20% virtual-time or RPC-envelope regression vs kv_smoke_baseline.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kv_smoke --check
 
+echo "== tier-storage smoke =="
+# cold/warm/hot sweep over a tiered (NVMe-over-COS) mount plus a write-back
+# durability pass; fails on a >20% virtual-time regression vs
+# tier_smoke_baseline.json or if any tier-dirty byte survives zero-scale
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.tier_smoke --check
+
 echo "== docs links =="
 # broken intra-repo references (markdown links + backticked repo paths)
 python scripts/check_docs.py

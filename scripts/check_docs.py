@@ -4,8 +4,10 @@
 Two kinds of reference are checked:
 
 * markdown links ``[text](target)`` whose target is not an external URL or
-  a pure ``#anchor`` — the target (anchor stripped) must exist relative to
-  the referencing file or the repo root;
+  a pure ``#anchor`` — the target (anchor stripped) must exist exactly
+  where a renderer would look: relative to the *referencing file* (or the
+  repo root for ``/``-prefixed targets).  No other fallback roots — a
+  link that 404s on GitHub must fail here;
 * backtick spans that look like repo file paths (``core/loadgen.py``,
   ``scripts/check.sh``, ``reports/bench/traffic.json``) — resolved against
   the repo root, ``src/repro`` (module docs drop the package prefix),
@@ -52,9 +54,20 @@ def basename_index() -> set[str]:
 
 
 def resolve(target: str, md_dir: str) -> bool:
+    """Multi-root resolution for prose path *spans*, which drop package
+    prefixes by convention (``core/flusher.py`` ≙ src/repro/core/…)."""
     roots = [REPO, os.path.join(REPO, "src", "repro"),
              os.path.join(REPO, "src"), md_dir]
     return any(os.path.exists(os.path.join(r, target)) for r in roots)
+
+
+def resolve_link(target: str, md_dir: str) -> bool:
+    """Markdown links resolve the way a renderer resolves them: relative
+    to the referencing file, or to the repo root when ``/``-prefixed.
+    Span-style fallback roots would let links that 404 on GitHub pass."""
+    if target.startswith("/"):
+        return os.path.exists(os.path.join(REPO, target.lstrip("/")))
+    return os.path.exists(os.path.normpath(os.path.join(md_dir, target)))
 
 
 def check_file(path: str, basenames: set[str]) -> list[str]:
@@ -69,7 +82,7 @@ def check_file(path: str, basenames: set[str]) -> list[str]:
                                       "#")):
                     continue
                 target = target.split("#", 1)[0]
-                if target and not resolve(target, md_dir):
+                if target and not resolve_link(target, md_dir):
                     errs.append(f"{rel}:{lineno}: broken link ({target})")
             for m in PATH_SPAN.finditer(line):
                 span = m.group(1)

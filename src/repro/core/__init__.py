@@ -14,7 +14,8 @@ shared state seam, and `Participant` / `Coordinator` / `Persister` /
 from .client import ClientConfig, ObjcacheClient
 from .cluster import Cluster, ScaleStats
 from .coordinator import Coordinator
-from .cos import CosError, CosStore
+from .cos import (BackendProfile, CosCapacityError, CosError, CosStore,
+                  CosThrottleError, GcsStore, NvmeStore, ObjectBackend)
 from .flusher import BackgroundFlusher
 from .fs import ObjcacheFS
 from .hashring import HashRing
@@ -31,20 +32,24 @@ from .raftlog import ChecksumError, RaftLog
 from .server import BucketMount, CacheServer, NODELIST_KEY, ServerConfig
 from .simclock import HardwareModel, InflightWindow, Resource, SimClock
 from .state import ServerState
+from .tiering import TierPolicy, TieredStore, eviction_priority
 from .types import (AdmissionError, CHUNK_SIZE_DEFAULT, Cmd, Errno, FSError,
                     InodeKind, InodeMeta, ROOT_INODE, TxId)
 
 __all__ = [
-    "AdmissionControl", "AdmissionError", "BackgroundFlusher", "BucketMount",
-    "CHUNK_SIZE_DEFAULT", "CacheServer", "ChecksumError", "ClientConfig",
-    "Cluster", "Cmd", "Coordinator", "CosError", "CosStore", "Errno",
-    "FSError", "HardwareModel", "HashRing", "InflightWindow", "InodeKind",
-    "InodeMeta", "Migrator", "NODELIST_KEY", "ObjcacheClient", "ObjcacheFS",
-    "OnOffArrivals", "OpEvent", "OpenLoopRunner", "Participant", "Persister",
+    "AdmissionControl", "AdmissionError", "BackendProfile",
+    "BackgroundFlusher", "BucketMount", "CHUNK_SIZE_DEFAULT", "CacheServer",
+    "ChecksumError", "ClientConfig", "Cluster", "Cmd", "Coordinator",
+    "CosCapacityError", "CosError", "CosStore", "CosThrottleError", "Errno",
+    "FSError", "GcsStore", "HardwareModel", "HashRing", "InflightWindow",
+    "InodeKind", "InodeMeta", "Migrator", "NODELIST_KEY", "NvmeStore",
+    "ObjcacheClient", "ObjcacheFS", "ObjectBackend", "OnOffArrivals",
+    "OpEvent", "OpenLoopRunner", "Participant", "Persister",
     "PoissonArrivals", "ROOT_INODE", "Resource", "Router", "RaftLog",
     "RpcSpec", "ScaleStats", "Schedule", "ServerConfig", "ServerState",
     "SimClock", "SimCrash", "SimTimeout", "TenantQos", "TenantSpec",
-    "TraceArrivals", "TxId", "UnknownRpcError", "build_schedule",
-    "default_qos_policy", "fs_fingerprint", "jain_index", "loadtest_hw",
-    "rpc_handler", "summarize",
+    "TierPolicy", "TieredStore", "TraceArrivals", "TxId", "UnknownRpcError",
+    "build_schedule", "default_qos_policy", "eviction_priority",
+    "fs_fingerprint", "jain_index", "loadtest_hw", "rpc_handler",
+    "summarize",
 ]

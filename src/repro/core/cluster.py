@@ -59,13 +59,22 @@ class Cluster:
                  hw: HardwareModel | None = None,
                  cfg: ServerConfig | None = None,
                  clock: SimClock | None = None,
-                 cos: CosStore | None = None) -> None:
+                 cos: CosStore | None = None,
+                 backends: dict[str, object] | None = None) -> None:
         self.workdir = workdir
         self.buckets = buckets
         self.hw = hw or HardwareModel()
         self.cfg = cfg or ServerConfig()
         self.clock = clock or SimClock()
         self.cos = cos or CosStore(self.clock, self.hw)
+        # named storage backends (CosStore / GcsStore / NvmeStore /
+        # TieredStore) referenced by BucketMount.backend; the reserved name
+        # "cos" always resolves to the swappable default `self.cos`
+        self.backends: dict[str, object] = backends or {}
+        for bm in buckets:
+            assert bm.backend == "cos" or bm.backend in self.backends, \
+                f"bucket {bm.bucket!r} bound to unknown backend " \
+                f"{bm.backend!r}"
         self.router = Router(self.clock, self.hw, self.cfg.rpc_timeout_s)
         self.servers: dict[str, CacheServer] = {}
         self._next_uid = 1
@@ -99,7 +108,7 @@ class Cluster:
             self._uids[node_id] = uid
         s = CacheServer(node_id, uid, os.path.join(self.workdir, node_id),
                         self.clock, self.router, self.cos, self.hw, self.cfg,
-                        self.buckets)
+                        self.buckets, backends=self.backends)
         self.servers[node_id] = s
         return s
 
@@ -231,6 +240,11 @@ class Cluster:
             t2, n_up = self._persist_node_dirty(s, t)
             t = max(t, t2)
             st.uploaded_inodes += n_up
+        # tiered buckets: demote every cache-tier resident to the durable
+        # base — after zero scaling only the durable backends hold data
+        for backend in self.backends.values():
+            if hasattr(backend, "flush_cache"):
+                t = max(t, backend.flush_cache(t))
         for s in list(self.servers.values()):
             s.alive = False
             self.router.unregister(s.node_id)
@@ -371,6 +385,9 @@ class Cluster:
         chunks = sum(len(s.chunks.dirty_keys()) for s in self.servers.values())
         out = {"dirty_metas": metas, "dirty_chunks": chunks}
         out.update(self.flusher.stats())  # per-tick flusher observability
+        for name, backend in sorted(self.backends.items()):
+            if hasattr(backend, "stats") and callable(backend.stats):
+                out[f"tier.{name}"] = backend.stats()
         return out
 
     def rpc_stats(self) -> dict[str, dict[str, float]]:

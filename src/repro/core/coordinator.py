@@ -247,8 +247,8 @@ class Coordinator:
         if d.loaded or d.cos_bucket is None:
             return {"children": dict(d.children)}, start
         prefix = d.cos_key or ""
-        objs, prefixes, t = st.cos.list_prefix(d.cos_bucket, prefix,
-                                               start=start)
+        objs, prefixes, t = st.backend_for(d.cos_bucket).list_prefix(
+            d.cos_bucket, prefix, start=start)
         plan: dict[str, dict] = {}
         new_children: dict[str, int] = {}
         for key, size in objs:

@@ -1,24 +1,109 @@
-"""Simulated cloud object storage (S3-compatible surface).
+"""Simulated external object storage — pluggable multi-backend layer.
 
 Implements the API subset objcache needs (§5.2): PutObject, GetObject with
 range reads, ListObjectsV2-style prefix+delimiter listing, DeleteObject, and
-multipart upload (begin / add part / commit / abort).  Backed by an in-memory
-dict of real bytes; timing charged against a shared `Resource` modelling a
-regional bucket (per-request latency + per-connection bandwidth with bounded
-parallelism).  Failure injection hooks let tests exercise the black-dot crash
-points of Fig. 8.
+multipart upload (begin / add part / commit / abort).  Backed by an
+in-memory dict of real bytes; timing charged against a per-backend
+`Resource` lane (per-request latency + per-connection bandwidth with bounded
+parallelism).
+
+Since PR 10 the single regional-bucket model is one *profile* of a shared
+`ObjectBackend` base.  Three concrete profiles ship:
+
+* `CosStore` — S3-like: high request latency, high aggregate throughput,
+  MPU required above ``put_limit_bytes`` (when a profile sets one);
+* `GcsStore` — GCS-like: a different latency/bandwidth lane (fewer, faster
+  connections) plus a connection *slow-start* ramp on the first requests;
+* `NvmeStore` — local-NVMe cache tier: microsecond latency, **bounded
+  capacity** (`CosCapacityError` when a put would overflow) — the fast
+  tier `core/tiering.py` promotes into and demotes out of.
+
+Contracts every backend honours (and `tests/test_tiering.py` asserts):
+
+* **One lane per backend.**  Each backend owns exactly one `Resource`; all
+  timing flows through ``self.resource.acquire`` (plus deterministic
+  retry/slow-start penalties), so two backends never contend with each
+  other and a tiered read/write charges each tier's own lane.
+* **Deterministic failure profiles.**  `fail_next(op)` injects one hard
+  `CosError` (the Fig. 8 black-dot crashes); `BackendProfile.throttle_every
+  = N` makes every Nth invocation of a throttled op hit a retryable
+  `CosThrottleError` (503/SlowDown).  With ``max_retries > 0`` the backend
+  retries *internally* — each attempt charges one extra request latency
+  plus ``retry_backoff_s`` of virtual time and bumps ``stats``
+  (``retries``) — and only raises once retries are exhausted.  Same seed,
+  same op sequence → same virtual end times, always.
+* **Capacity accounting is exact.**  `used_bytes` counts stored objects
+  plus uncommitted MPU parts; `put_object`/`mpu_add` raise
+  `CosCapacityError` *before* mutating state when the write would exceed
+  ``capacity_bytes``, so a failed put never half-lands.  Deletes free
+  capacity immediately.
+
+The default `CosStore()` (no profile overrides) is byte- and
+virtual-time-identical to the pre-PR-10 single store: same resource
+parameters from `HardwareModel.make_cos`, no extra acquires, no penalties —
+the single-backend metamorphic test pins this.
 """
 
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 from .simclock import HardwareModel, Resource, SimClock
 
 
 class CosError(Exception):
-    pass
+    """Hard, non-retryable storage failure (NoSuchKey, injected faults)."""
+
+
+class CosThrottleError(CosError):
+    """Retryable throttle (S3 503 SlowDown / GCS 429): the backend retries
+    internally up to ``profile.max_retries`` before surfacing this."""
+
+
+class CosCapacityError(CosError):
+    """A put would exceed the backend's ``capacity_bytes`` (NVMe tier full);
+    callers (the tiering engine) must demote/evict before retrying."""
+
+
+@dataclass(frozen=True)
+class BackendProfile:
+    """Latency / bandwidth / failure envelope of one storage backend.
+
+    ``latency_s`` + ``conn_bps`` + ``parallelism`` parameterize the
+    backend's `Resource` lane.  The failure knobs are all *off* by default
+    so the default profile reproduces the pre-PR-10 store exactly:
+
+    * ``throttle_every`` — every Nth data-plane request raises a retryable
+      `CosThrottleError` (0 disables);
+    * ``max_retries`` / ``retry_backoff_s`` — internal retry budget per
+      request; each retry charges one extra ``latency_s`` +
+      ``retry_backoff_s``;
+    * ``slow_start_ops`` / ``slow_start_factor`` — the first N transfers
+      pay ``factor``× the bandwidth cost (cold HTTP connections);
+    * ``capacity_bytes`` — bound on stored + in-flight bytes (None =
+      unbounded);
+    * ``put_limit_bytes`` — single PutObject size cap (MPU required above
+      it, as real S3 enforces at 5 GiB; None = uncapped).
+    """
+
+    name: str = "cos"
+    latency_s: float = 30e-3
+    conn_bps: float = 120e6
+    parallelism: int = 64
+    throttle_every: int = 0
+    max_retries: int = 0
+    retry_backoff_s: float = 0.05
+    slow_start_ops: int = 0
+    slow_start_factor: float = 2.0
+    capacity_bytes: int | None = None
+    put_limit_bytes: int | None = None
+    durable: bool = True
+
+
+# ops whose Nth-request counter the throttle profile polices (data plane
+# only: control ops like exists() are free probes in the sim)
+_THROTTLED_OPS = ("put_object", "get_object", "mpu_add", "mpu_commit")
 
 
 @dataclass
@@ -28,44 +113,134 @@ class _MPU:
     upload_id: str
     parts: dict[int, bytes] = field(default_factory=dict)
 
+    def bytes(self) -> int:
+        return sum(len(p) for p in self.parts.values())
 
-class CosStore:
-    """One external storage endpoint holding many buckets."""
 
-    def __init__(self, clock: SimClock, hw: HardwareModel | None = None) -> None:
+class ObjectBackend:
+    """One external storage endpoint holding many buckets.
+
+    Subclasses pin a `BackendProfile` (and with it a `Resource` lane);
+    everything else — the in-memory data plane, MPU machinery, failure
+    injection, stats — is shared here.
+    """
+
+    profile_defaults = BackendProfile()
+
+    def __init__(self, clock: SimClock,
+                 profile: BackendProfile | None = None,
+                 resource: Resource | None = None) -> None:
         self.clock = clock
-        self.hw = hw or HardwareModel()
-        self.resource: Resource = self.hw.make_cos()
+        self.profile = profile or self.profile_defaults
+        p = self.profile
+        self.resource: Resource = resource or Resource(
+            p.name, p.conn_bps, p.latency_s, p.parallelism)
         self._objects: dict[tuple[str, str], bytes] = {}
         self._mpus: dict[str, _MPU] = {}
         self._upload_ids = itertools.count(1)
         # failure injection: set of op names that fail once when next invoked
         self._fail_once: set[str] = set()
+        self._throttle_seen = 0
+        self._transfers_seen = 0
         # stats
         self.ops: dict[str, int] = {}
         self.bytes_in = 0
         self.bytes_out = 0
+        self.stats: dict[str, float] = {}
+
+    @property
+    def name(self) -> str:
+        return self.profile.name
+
+    @property
+    def durable(self) -> bool:
+        return self.profile.durable
+
+    # ---- capacity accounting ---------------------------------------------
+    def used_bytes(self) -> int:
+        """Stored objects plus uncommitted MPU parts — the quantity
+        ``capacity_bytes`` bounds."""
+        return sum(len(v) for v in self._objects.values()) + \
+            sum(m.bytes() for m in self._mpus.values())
+
+    def free_bytes(self) -> int | None:
+        cap = self.profile.capacity_bytes
+        return None if cap is None else cap - self.used_bytes()
+
+    def object_count(self, bucket: str | None = None) -> int:
+        if bucket is None:
+            return len(self._objects)
+        return sum(1 for (b, _k) in self._objects if b == bucket)
+
+    def _check_capacity(self, incoming: int, replacing: int = 0) -> None:
+        cap = self.profile.capacity_bytes
+        if cap is not None and \
+                self.used_bytes() - replacing + incoming > cap:
+            raise CosCapacityError(
+                f"{self.name}: put of {incoming}B exceeds capacity "
+                f"{cap}B (used {self.used_bytes()}B)")
 
     # ---- failure injection -------------------------------------------------
     def fail_next(self, op: str) -> None:
         self._fail_once.add(op)
 
-    def _maybe_fail(self, op: str) -> None:
+    def _bump(self, stat: str, n: float = 1) -> None:
+        self.stats[stat] = self.stats.get(stat, 0) + n
+
+    def _admit(self, op: str, t0: float) -> float:
+        """Count the request, apply one-shot injected failures, and run the
+        deterministic throttle/retry schedule.  Returns the (possibly
+        backoff-delayed) time the request's transfer may begin; raises
+        when the failure is non-retryable or retries are exhausted."""
         self.ops[op] = self.ops.get(op, 0) + 1
         if op in self._fail_once:
             self._fail_once.discard(op)
             raise CosError(f"injected failure: {op}")
+        p = self.profile
+        if p.throttle_every and op in _THROTTLED_OPS:
+            self._throttle_seen += 1
+            if self._throttle_seen % p.throttle_every == 0:
+                # every Nth data-plane request hits one throttle event;
+                # with a retry budget the *next* attempt succeeds
+                if p.max_retries <= 0:
+                    self._bump("throttles")
+                    raise CosThrottleError(f"{self.name}: SlowDown ({op})")
+                self._bump("throttles")
+                self._bump("retries")
+                t0 = t0 + p.latency_s + p.retry_backoff_s
+        return t0
+
+    def _transfer_penalty(self, nbytes: int) -> float:
+        """Extra seconds for connection slow-start on the first transfers."""
+        p = self.profile
+        if nbytes and self._transfers_seen <= p.slow_start_ops:
+            self._bump("slow_starts")
+            return (p.slow_start_factor - 1.0) * nbytes / p.conn_bps
+        return 0.0
+
+    def _charge(self, t0: float, nbytes: int) -> float:
+        """Book the transfer on this backend's lane (+ slow-start ramp)."""
+        if nbytes:
+            self._transfers_seen += 1
+        return self.resource.acquire(t0, nbytes) + \
+            self._transfer_penalty(nbytes)
 
     # ---- data plane ----------------------------------------------------------
     def make_bucket(self, bucket: str) -> None:
         # buckets are implicit; kept for API parity
-        self._maybe_fail("make_bucket")
+        self._admit("make_bucket", 0.0)
 
     def put_object(self, bucket: str, key: str, data: bytes,
                    start: float | None = None) -> float:
-        self._maybe_fail("put_object")
         t0 = self.clock.now if start is None else start
-        end = self.resource.acquire(t0, len(data))
+        t0 = self._admit("put_object", t0)
+        lim = self.profile.put_limit_bytes
+        if lim is not None and len(data) > lim:
+            raise CosError(f"{self.name}: EntityTooLarge ({len(data)}B > "
+                           f"{lim}B); use multipart upload")
+        old = self._objects.get((bucket, key))
+        self._check_capacity(len(data), replacing=len(old) if old else 0)
+        end = self._charge(t0, len(data))
         self._objects[(bucket, key)] = bytes(data)
         self.bytes_in += len(data)
         return end
@@ -74,28 +249,28 @@ class CosStore:
                    rng: tuple[int, int] | None = None,
                    start: float | None = None) -> tuple[bytes, float]:
         """rng = (offset, length) half-open byte range."""
-        self._maybe_fail("get_object")
+        t0 = self.clock.now if start is None else start
+        t0 = self._admit("get_object", t0)
         obj = self._objects.get((bucket, key))
         if obj is None:
-            raise CosError(f"NoSuchKey: s3://{bucket}/{key}")
+            raise CosError(f"NoSuchKey: {self.name}://{bucket}/{key}")
         if rng is not None:
             off, ln = rng
             data = obj[off:off + ln]
         else:
             data = obj
-        t0 = self.clock.now if start is None else start
-        end = self.resource.acquire(t0, len(data))
+        end = self._charge(t0, len(data))
         self.bytes_out += len(data)
         return data, end
 
     def head_object(self, bucket: str, key: str,
                     start: float | None = None) -> tuple[int, float]:
-        self._maybe_fail("head_object")
+        t0 = self.clock.now if start is None else start
+        t0 = self._admit("head_object", t0)
         obj = self._objects.get((bucket, key))
         if obj is None:
-            raise CosError(f"NoSuchKey: s3://{bucket}/{key}")
-        t0 = self.clock.now if start is None else start
-        return len(obj), self.resource.acquire(t0, 0)
+            raise CosError(f"NoSuchKey: {self.name}://{bucket}/{key}")
+        return len(obj), self._charge(t0, 0)
 
     def exists(self, bucket: str, key: str) -> bool:
         return (bucket, key) in self._objects
@@ -105,7 +280,8 @@ class CosStore:
                     ) -> tuple[list[tuple[str, int]], list[str], float]:
         """Returns (objects=[(key,size)...], common_prefixes, t_end); COS has
         no directories — keys under `prefix` up to `delimiter` (§3.2, §5.4)."""
-        self._maybe_fail("list_prefix")
+        t0 = self.clock.now if start is None else start
+        t0 = self._admit("list_prefix", t0)
         objs: list[tuple[str, int]] = []
         prefixes: set[str] = set()
         for (b, k), v in self._objects.items():
@@ -119,53 +295,123 @@ class CosStore:
                 prefixes.add(prefix + rest.split(delimiter, 1)[0] + delimiter)
             else:
                 objs.append((k, len(v)))
-        t0 = self.clock.now if start is None else start
-        end = self.resource.acquire(t0, 0)
+        end = self._charge(t0, 0)
         return sorted(objs), sorted(prefixes), end
 
     def delete_object(self, bucket: str, key: str,
                       start: float | None = None) -> float:
-        self._maybe_fail("delete_object")
-        self._objects.pop((bucket, key), None)  # S3 delete is idempotent
         t0 = self.clock.now if start is None else start
-        return self.resource.acquire(t0, 0)
+        t0 = self._admit("delete_object", t0)
+        self._objects.pop((bucket, key), None)  # S3 delete is idempotent
+        return self._charge(t0, 0)
 
     # ---- multipart upload (§5.2) ---------------------------------------------
     def mpu_begin(self, bucket: str, key: str,
                   start: float | None = None) -> tuple[str, float]:
-        self._maybe_fail("mpu_begin")
+        t0 = self.clock.now if start is None else start
+        t0 = self._admit("mpu_begin", t0)
         uid = f"mpu-{next(self._upload_ids)}"
         self._mpus[uid] = _MPU(bucket, key, uid)
-        t0 = self.clock.now if start is None else start
-        return uid, self.resource.acquire(t0, 0)
+        return uid, self._charge(t0, 0)
 
     def mpu_add(self, upload_id: str, part_no: int, data: bytes,
                 start: float | None = None) -> float:
-        self._maybe_fail("mpu_add")
+        t0 = self.clock.now if start is None else start
+        t0 = self._admit("mpu_add", t0)
         mpu = self._mpus.get(upload_id)
         if mpu is None:
             raise CosError(f"NoSuchUpload: {upload_id}")
+        old = mpu.parts.get(part_no)
+        self._check_capacity(len(data), replacing=len(old) if old else 0)
         mpu.parts[part_no] = bytes(data)
         self.bytes_in += len(data)
-        t0 = self.clock.now if start is None else start
-        return self.resource.acquire(t0, len(data))
+        return self._charge(t0, len(data))
 
     def mpu_commit(self, upload_id: str,
                    start: float | None = None) -> float:
-        self._maybe_fail("mpu_commit")
+        t0 = self.clock.now if start is None else start
+        t0 = self._admit("mpu_commit", t0)
         mpu = self._mpus.pop(upload_id, None)
         if mpu is None:
             raise CosError(f"NoSuchUpload: {upload_id}")
         blob = b"".join(mpu.parts[i] for i in sorted(mpu.parts))
         self._objects[(mpu.bucket, mpu.key)] = blob
-        t0 = self.clock.now if start is None else start
-        return self.resource.acquire(t0, 0)
+        return self._charge(t0, 0)
 
     def mpu_abort(self, upload_id: str, start: float | None = None) -> float:
-        self._maybe_fail("mpu_abort")
-        self._mpus.pop(upload_id, None)  # idempotent
         t0 = self.clock.now if start is None else start
-        return self.resource.acquire(t0, 0)
+        t0 = self._admit("mpu_abort", t0)
+        self._mpus.pop(upload_id, None)  # idempotent
+        return self._charge(t0, 0)
 
     def outstanding_mpus(self) -> list[str]:
         return sorted(self._mpus)
+
+
+class CosStore(ObjectBackend):
+    """S3-like regional bucket — the paper's single external store.
+
+    Keeps the historical constructor ``CosStore(clock, hw)`` so every
+    existing cluster/benchmark/test builds the exact same backend: the
+    `Resource` comes from `HardwareModel.make_cos` (30 ms request latency,
+    120 MB/s per connection, 64 connections) and all failure knobs are off
+    unless a profile overrides them.
+    """
+
+    def __init__(self, clock: SimClock, hw: HardwareModel | None = None,
+                 profile: BackendProfile | None = None) -> None:
+        self.hw = hw or HardwareModel()
+        if profile is None:
+            profile = BackendProfile(
+                name="cos", latency_s=self.hw.cos_latency_s,
+                conn_bps=self.hw.cos_conn_bps,
+                parallelism=self.hw.cos_parallelism)
+        super().__init__(clock, profile,
+                         resource=self.hw.make_lane(
+                             profile.name, profile.conn_bps,
+                             profile.latency_s, profile.parallelism))
+
+
+GCS_PROFILE = BackendProfile(
+    name="gcs", latency_s=45e-3, conn_bps=200e6, parallelism=32,
+    slow_start_ops=8, slow_start_factor=2.0)
+
+NVME_PROFILE = BackendProfile(
+    name="nvme", latency_s=120e-6, conn_bps=2.5e9, parallelism=16,
+    capacity_bytes=256 << 20, durable=False)
+
+
+class GcsStore(ObjectBackend):
+    """GCS-like backend: fewer but faster connections than S3, higher
+    per-request latency, and a connection slow-start ramp on the first
+    transfers — a genuinely different lane and failure envelope."""
+
+    profile_defaults = GCS_PROFILE
+
+    def __init__(self, clock: SimClock,
+                 profile: BackendProfile | None = None) -> None:
+        super().__init__(clock, profile or self.profile_defaults)
+
+
+class NvmeStore(ObjectBackend):
+    """Local-NVMe cache tier: microsecond latency, node-class bandwidth,
+    **bounded capacity** (`CosCapacityError` on overflow) and *not* durable
+    in the tiering sense — `core/tiering.py` must land dirty bytes on a
+    durable tier before this one may evict them."""
+
+    profile_defaults = NVME_PROFILE
+
+    def __init__(self, clock: SimClock,
+                 profile: BackendProfile | None = None,
+                 capacity_bytes: int | None = None) -> None:
+        profile = profile or self.profile_defaults
+        if capacity_bytes is not None:
+            profile = replace(profile, capacity_bytes=capacity_bytes)
+        super().__init__(clock, profile)
+
+    def evict(self, bucket: str, key: str) -> int:
+        """Drop a resident object without charging the lane (metadata-only
+        invalidation); returns the bytes freed.  The tiering engine calls
+        this only after the dirty-durability invariant is satisfied."""
+        data = self._objects.pop((bucket, key), None)
+        return len(data) if data is not None else 0

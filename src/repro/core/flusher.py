@@ -8,16 +8,27 @@ through a bounded `InflightWindow` (``flush_inflight``), so COS connections
 and node NICs carry many uploads at once and the virtual-time drain of N
 dirty files approaches N / window instead of N.
 
-Two policies ride on top of the pipeline:
+Three policies ride on top of the pipeline:
 
 * **dirty-page backpressure** — when a node's dirty bytes exceed
   ``dirty_hiwater_bytes``, its `rpc_stage_write` replies carry a stall hint
   that clients honour before issuing more foreground writes (client.py), and
   the flusher switches to priority eviction;
-* **priority eviction** — above the watermark, candidates are ordered
-  coldest-first (oldest mtime), largest-first, so each flushed inode frees
-  the most cache for the longest time; below it, FIFO by inode id preserves
-  the old behaviour.
+* **priority eviction** — above the watermark, candidates are ordered by
+  `tiering.eviction_priority`: coldest-first (oldest mtime), largest-first,
+  so each flushed inode frees the most cache for the longest time; below
+  it, FIFO by inode id preserves the old behaviour.  The rule is shared
+  with tier demotion so "what leaves the cache first" has one definition;
+* **tier maintenance** — every tick ends by running ``maintain()`` on each
+  registered storage backend that exposes one (the `TieredStore` capacity
+  pass), so NVMe-tier watermark demotion rides the same cadence as dirty
+  write-back (``tier_demotions`` counter).  The tiering invariants the
+  flusher leans on (`core/tiering.py`): a tier-dirty key is copied to the
+  durable base *before* its cache copy is dropped, demotion charges only
+  the durable lane, and a persist that lands via the PutObject fast path
+  may sit tier-dirty on NVMe — it is still crash-durable for Fig. 8
+  purposes only after the tier demotes it, which `Cluster.scale_to_zero`
+  forces via ``flush_cache()`` before the last node disappears.
 
 The flusher is *driven* by `flush_interval_s` on the simclock: `poll()` runs
 a tick only when the interval has elapsed, so callers can invoke it after
@@ -34,6 +45,7 @@ from typing import TYPE_CHECKING
 
 from .net import SimCrash, SimTimeout
 from .simclock import InflightWindow
+from .tiering import eviction_priority
 from .types import FSError, InodeKind, ROOT_INODE, meta_key
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -110,7 +122,8 @@ class BackgroundFlusher:
         pressured = self.under_pressure()
         if pressured:
             # priority eviction: coldest (oldest mtime) first, then largest
-            cands.sort(key=lambda c: (c[3], -c[2], c[1]))
+            # — the same rule tier demotion applies (tiering.py)
+            cands.sort(key=lambda c: eviction_priority(c[3], c[2], c[1]))
         else:
             cands.sort(key=lambda c: c[1])
         if max_inodes is not None:
@@ -137,6 +150,15 @@ class BackgroundFlusher:
             window.settle(te)
             ends.append(te)
         t = max(ends) if ends else start
+        # tier maintenance rides the flush cadence: relieve fast-tier
+        # capacity pressure (coldest-first demotion) after every pass
+        for backend in cl.backends.values():
+            if hasattr(backend, "maintain"):
+                moved, tm = backend.maintain(t)
+                if moved:
+                    self.counters["tier_demotions"] = \
+                        self.counters.get("tier_demotions", 0) + moved
+                    t = max(t, tm)
         # server-side stall hints issued since the last aggregation
         self.counters["backpressure_stalls"] = sum(
             s.stats.get("bp_stalls", 0) for s in cl.servers.values())

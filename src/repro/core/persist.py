@@ -40,9 +40,10 @@ class Persister:
             return {"outcome": "no-backing"}, start  # not bucket-mapped
         t = start
 
+        be = st.backend_for(m.cos_bucket)
         if m.deleted:
             # §5.4: deletion propagates as a COS delete
-            t = st.cos.delete_object(m.cos_bucket, m.cos_key, start=t)
+            t = be.delete_object(m.cos_bucket, m.cos_key, start=t)
             t = self.wal.log(Cmd.COS_DELETE_DONE,
                              {"ino": ino, "key": m.cos_key}, t)
             t = self._clear_dirty_everywhere(ino, m, t, client_id, seq)
@@ -54,8 +55,8 @@ class Persister:
                                  {"ino": ino, "version": m.version}, t)
                 return {"outcome": "dir"}, t
             # directory marker object ("key/" suffix denotes a dir, §3.2)
-            t = st.cos.put_object(m.cos_bucket,
-                                  m.cos_key.rstrip("/") + "/", b"", start=t)
+            t = be.put_object(m.cos_bucket,
+                              m.cos_key.rstrip("/") + "/", b"", start=t)
             t = self.wal.log(Cmd.PUT_OBJECT_DONE, {"ino": ino}, t)
             t = self._clear_dirty_everywhere(ino, m, t, client_id, seq)
             return {"outcome": "dir"}, t
@@ -66,7 +67,7 @@ class Persister:
             # PutObject fast path (§5.2): single participant, single log write
             data, t = self.materialize_local(ino, 0, m, t)
             try:
-                t = st.cos.put_object(m.cos_bucket, m.cos_key, data, start=t)
+                t = be.put_object(m.cos_bucket, m.cos_key, data, start=t)
             except CosError:
                 return {"outcome": "abort"}, t
             st.crash_at("persist_after_put")
@@ -80,7 +81,7 @@ class Persister:
         # owners.  Parts fan out so they occupy COS/NIC lanes simultaneously,
         # bounded by the configurable in-flight window (persist_part_window).
         try:
-            upload_id, t = st.cos.mpu_begin(m.cos_bucket, m.cos_key, start=t)
+            upload_id, t = be.mpu_begin(m.cos_bucket, m.cos_key, start=t)
         except CosError:
             return {"outcome": "abort"}, t
         t = self.wal.log(Cmd.MPU_BEGIN_RECORDED,
@@ -96,7 +97,7 @@ class Persister:
             try:
                 if owner == st.node_id:
                     data, te = self.materialize_local(ino, coff, m, begin)
-                    te = st.cos.mpu_add(upload_id, part_no, data, start=te)
+                    te = be.mpu_add(upload_id, part_no, data, start=te)
                 else:
                     # the part payload travels owner->COS inside the handler;
                     # declare it so fabric byte accounting stays truthful
@@ -114,13 +115,13 @@ class Persister:
             ends.append(te)
         t = max(ends) if ends else t
         if not ok:
-            t = self._abort_mpu(upload_id, t)
+            t = self._abort_mpu(be, upload_id, t)
             st.bump("persist_abort")
             return {"outcome": "abort"}, t
         try:
-            t = st.cos.mpu_commit(upload_id, start=t)
+            t = be.mpu_commit(upload_id, start=t)
         except CosError:
-            t = self._abort_mpu(upload_id, t)
+            t = self._abort_mpu(be, upload_id, t)
             return {"outcome": "abort"}, t
         st.crash_at("persist_after_mpu_commit")
         t = self.wal.log(Cmd.MPU_COMMITTED,
@@ -137,9 +138,10 @@ class Persister:
         c = st.chunks.get(ino, coff)
         t = start
         if c is None or not c.covered(0, ln):
-            if m.cos_key is not None and st.cos.exists(m.cos_bucket, m.cos_key):
-                data, t = st.cos.get_object(m.cos_bucket, m.cos_key,
-                                            rng=(coff, ln), start=t)
+            be = st.backend_for(m.cos_bucket)
+            if m.cos_key is not None and be.exists(m.cos_bucket, m.cos_key):
+                data, t = be.get_object(m.cos_bucket, m.cos_key,
+                                        rng=(coff, ln), start=t)
                 ref, t = st.raft.append_bulk(data, start=t)
                 t = self.wal.log(Cmd.CHUNK_FILL_FROM_COS,
                                  {"ino": ino, "chunk_off": coff, "off": 0,
@@ -161,15 +163,15 @@ class Persister:
         m = InodeMeta(ino=ino, kind=InodeKind.FILE, size=file_size,
                       cos_bucket=cos_bucket, cos_key=cos_key)
         data, t = self.materialize_local(ino, chunk_off, m, start)
-        t = st.cos.mpu_add(upload_id, part_no, data[:length], start=t)
+        t = st.backend_for(cos_bucket).mpu_add(upload_id, part_no,
+                                               data[:length], start=t)
         st.bump("mpu_part")
         return {"ok": True}, t
 
-    def _abort_mpu(self, upload_id: str, start: float) -> float:
-        """Abort an upload at COS and retire its pending record so replay
-        does not resurrect it as an orphan."""
-        st = self.state
-        t = st.cos.mpu_abort(upload_id, start=start)
+    def _abort_mpu(self, backend, upload_id: str, start: float) -> float:
+        """Abort an upload at its backend and retire the pending record so
+        replay does not resurrect it as an orphan."""
+        t = backend.mpu_abort(upload_id, start=start)
         return self.wal.log(Cmd.MPU_ABORTED, {"upload_id": upload_id}, t)
 
     def recover_orphan_mpus(self, start: float) -> float:
@@ -179,8 +181,9 @@ class Persister:
         st = self.state
         t = start
         for upload_id in sorted(st.mpu_pending):
+            be = st.backend_for(st.mpu_pending[upload_id].get("bucket"))
             try:
-                t = st.cos.mpu_abort(upload_id, start=t)
+                t = be.mpu_abort(upload_id, start=t)
             except CosError:
                 continue  # retried at the next recovery pass
             t = self.wal.log(Cmd.MPU_ABORTED, {"upload_id": upload_id}, t)
@@ -190,9 +193,10 @@ class Persister:
     def _delete_old_keys(self, m: InodeMeta, start: float) -> float:
         st = self.state
         t = start
+        be = st.backend_for(m.cos_bucket)
         for old in m.cos_old_keys:
             if old != m.cos_key:
-                t = st.cos.delete_object(m.cos_bucket, old, start=t)
+                t = be.delete_object(m.cos_bucket, old, start=t)
                 t = self.wal.log(Cmd.COS_DELETE_DONE,
                                  {"ino": m.ino, "key": old}, t)
         return t

@@ -75,23 +75,32 @@ class ServerConfig:
 
 @dataclass
 class BucketMount:
-    """One external bucket mounted at /<dirname> (§3.1, Fig. 3a)."""
+    """One external bucket mounted at /<dirname> (§3.1, Fig. 3a).
+
+    ``backend`` names the storage backend the bucket's objects live on —
+    a key into the cluster's backend registry (`Cluster(backends=...)`),
+    or the reserved default "cos" (the cluster-wide `CosStore`, resolved
+    through the swappable `ServerState.cos`).  See docs/STORAGE.md."""
 
     dirname: str
     bucket: str
+    backend: str = "cos"
 
 
 class CacheServer:
     def __init__(self, node_id: str, server_uid: int, workdir: str,
                  clock: SimClock, router: Router, cos: CosStore,
                  hw: HardwareModel, cfg: ServerConfig | None = None,
-                 buckets: list[BucketMount] | None = None) -> None:
+                 buckets: list[BucketMount] | None = None,
+                 backends: dict[str, object] | None = None) -> None:
         cfg = cfg or ServerConfig()
         self.buckets = buckets or []
         disk = hw.make_disk(node_id)
         self.state = ServerState(
             node_id=node_id, server_uid=server_uid, workdir=workdir,
             clock=clock, router=router, cos=cos, hw=hw, cfg=cfg,
+            backends=backends or {},
+            bucket_backends={bm.bucket: bm.backend for bm in self.buckets},
             raft=RaftLog(workdir, clock, disk), disk=disk,
             nic=hw.make_nic(node_id))
         self.state.locks = self.state.make_lock_table()
@@ -297,16 +306,17 @@ class CacheServer:
         st = self.state
         st.check_alive()
         st.check_nl(nl_version)
+        be = st.backend_for(cos_bucket)
         c = st.chunks.get(ino, chunk_off)
         cover_len = max(0, min(st.cfg.chunk_size, file_size - chunk_off))
         t = start
         if (c is None or not c.covered(off, min(length, cover_len - off))) \
                 and cos_bucket and cos_key and cover_len > 0 \
-                and st.cos.exists(cos_bucket, cos_key):
+                and be.exists(cos_bucket, cos_key):
             # cache miss: fetch this chunk's whole range of the object once
             st.bump("cos_fill")
-            data, t = st.cos.get_object(cos_bucket, cos_key,
-                                        rng=(chunk_off, cover_len), start=t)
+            data, t = be.get_object(cos_bucket, cos_key,
+                                    rng=(chunk_off, cover_len), start=t)
             ref, t = st.raft.append_bulk(data, start=t)
             t = self._log(Cmd.CHUNK_FILL_FROM_COS,
                           {"ino": ino, "chunk_off": chunk_off, "off": 0,

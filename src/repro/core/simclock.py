@@ -143,3 +143,10 @@ class HardwareModel:
     def make_cos(self) -> Resource:
         return Resource("cos", self.cos_conn_bps, self.cos_latency_s,
                         self.cos_parallelism)
+
+    def make_lane(self, name: str, bps: float, latency_s: float,
+                  parallelism: int) -> Resource:
+        """Generic bandwidth lane for a pluggable storage backend
+        (`cos.BackendProfile`): each backend owns one, so S3-like,
+        GCS-like, and NVMe-tier traffic never contend with each other."""
+        return Resource(name, bps, latency_s, parallelism)

@@ -47,6 +47,14 @@ class ServerState:
     disk: Resource
     nic: Resource
 
+    # ---- storage-backend binding (tiered multi-backend storage) ---------
+    # named backends shared cluster-wide ({name: ObjectBackend|TieredStore})
+    # and the per-bucket binding derived from the BucketMounts; an unbound
+    # bucket (or one bound to the reserved name "cos") resolves to the
+    # swappable default `self.cos`, preserving the pre-tiering behaviour
+    backends: dict[str, object] = field(default_factory=dict)
+    bucket_backends: dict[str, str] = field(default_factory=dict)
+
     # ---- working tables, rebuilt exactly by WAL replay (§3.4) -----------
     metas: MetaTable = field(default_factory=MetaTable)
     chunks: ChunkTable = field(default_factory=ChunkTable)
@@ -155,6 +163,21 @@ class ServerState:
         if lease_epoch != cur:
             self.bump("lease_stale")
             raise StaleLeaseError(ino, lease_epoch, cur)
+
+    # =====================================================================
+    # storage-backend binding
+    # =====================================================================
+    def backend_for(self, bucket: str | None):
+        """Resolve a bucket to its bound storage backend.  The reserved
+        binding name "cos" (and any unbound bucket) resolves to the
+        swappable default `self.cos` — tests and benchmarks that splice a
+        shared external store across cold restarts keep working, and a
+        cluster built without explicit backends is bit-identical to the
+        pre-tiering single store."""
+        name = self.bucket_backends.get(bucket or "", "cos")
+        if name == "cos":
+            return self.cos
+        return self.backends[name]
 
     # =====================================================================
     # placement / allocation helpers

@@ -1,0 +1,372 @@
+"""Capacity-aware storage tiering — promotion/demotion over multi-backend
+stacks (the Hoard-style cache tier over cloud storage).
+
+`TieredStore` binds an ordered stack of `ObjectBackend`s — fastest first
+(e.g. a bounded `NvmeStore`), a durable unbounded backend last (S3- or
+GCS-like) — behind the exact same put/get/head/exists/list/delete/MPU
+surface `CosStore` exposes, so `persist.py`, the server read path, and the
+benchmarks route through a tier stack without knowing it is one.  The
+policy knobs live in `TierPolicy`; the demotion engine is `maintain()`,
+driven by the background flusher's tick (`core/flusher.py`) so capacity
+pressure is relieved on the same cadence as dirty write-back.
+
+Contracts the stack guarantees (asserted by `tests/test_tiering.py`):
+
+* **Dirty durability before eviction.**  A write-back put lands on the
+  fastest tier with room and the key is marked *tier-dirty* (newest copy
+  not on a durable tier).  A tier-dirty key is never evicted: making room
+  or demoting always *copies it to the durable tier first* (charging the
+  durable lane), then drops the cache copy.  `CosCapacityError` from the
+  fast tier therefore never loses data — worst case the put falls through
+  to the durable tier directly.  MPU traffic goes straight to the durable
+  tier (parts are bulk uploads), and a committed MPU invalidates any stale
+  cache copy of its key.
+* **Capacity accounting is the backend's.**  The stack never shadows
+  `used_bytes`; it reacts to the fast tier's own `capacity_bytes` (via
+  `CosCapacityError` and the `demote_hiwater`/`demote_lowater` watermarks),
+  so the backend's accounting and the policy can never disagree.
+* **Lane charging stays per-tier.**  Every byte moved charges exactly the
+  lanes it crosses: a cache hit charges only the fast tier, a miss only
+  the durable tier, a demotion charges the durable put, and a promotion's
+  cache fill is charged on the fast lane *asynchronously* (the read
+  returns at the durable read's end; the fill occupies fast-tier lanes
+  afterwards, like any background write-back).
+* **Eviction order reuses the flusher's priority machinery.**  Demotion
+  candidates are ordered by `eviction_priority` — coldest-first (oldest
+  last access), then largest-first — the same rule
+  `BackgroundFlusher.tick` applies under dirty-page pressure, so "which
+  data leaves the expensive tier first" has one definition repo-wide.
+* **Determinism.**  Heat counters, residency, and the demotion order are
+  plain dicts keyed by (bucket, key) with sorted tie-breaks; the same op
+  sequence against the same stack yields identical virtual end times.
+
+A single-backend "stack" is just the backend itself: binding a bucket to
+one `CosStore` (or leaving the default binding) bypasses this module
+entirely and reproduces the pre-tiering fingerprints bit-for-bit — the
+metamorphic equivalence test pins that.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .cos import CosCapacityError, CosError, ObjectBackend
+from .simclock import SimClock
+
+
+def eviction_priority(last_touch: float, size: int, tiebreak) -> tuple:
+    """Shared eviction ordering: coldest first (oldest last touch), then
+    largest first, then a deterministic tiebreak.  Used by the background
+    flusher's under-pressure candidate sort and by tier demotion — one
+    definition of "what leaves the cache first" for the whole repo."""
+    return (last_touch, -size, tiebreak)
+
+
+@dataclass
+class TierPolicy:
+    """Knobs of the promotion/demotion engine.
+
+    * ``promote_min_hits`` — reads of a key served by a lower tier before
+      it is promoted into the fast tier (1 = promote on first access);
+    * ``demote_hiwater`` / ``demote_lowater`` — fractions of the fast
+      tier's capacity: `maintain()` starts demoting above hiwater and
+      stops once usage falls to lowater (mirrors the flusher's dirty-page
+      watermarks);
+    * ``writeback`` — puts land on the fast tier (tier-dirty until
+      demoted); False = write-through to the durable tier only.
+    """
+
+    promote_min_hits: int = 2
+    demote_hiwater: float = 0.90
+    demote_lowater: float = 0.70
+    writeback: bool = True
+
+
+class TieredStore:
+    """An ordered backend stack behind the single-store API.
+
+    ``tiers[0]`` is the fast (bounded) tier, ``tiers[-1]`` must be durable
+    and unbounded — it is the demotion target and the MPU endpoint.  Two
+    tiers are the supported configuration (fast cache + durable base);
+    middle tiers are read-preferred but never demotion targets.
+    """
+
+    def __init__(self, tiers: list[ObjectBackend], clock: SimClock,
+                 policy: TierPolicy | None = None,
+                 name: str = "tiered") -> None:
+        assert len(tiers) >= 2, "a tier stack needs a cache and a base"
+        assert tiers[-1].durable, "the last tier must be durable"
+        assert tiers[-1].profile.capacity_bytes is None, \
+            "the durable base tier must be unbounded"
+        self.tiers = tiers
+        self.clock = clock
+        self.policy = policy or TierPolicy()
+        self.name = name
+        self.durable = True  # the *stack* is durable (via its base tier)
+        # (bucket, key) -> [hits, last_touch]: read heat for promotion and
+        # the coldest-first demotion order
+        self._heat: dict[tuple[str, str], list] = {}
+        # keys whose newest copy lives only on a non-durable tier
+        self._tier_dirty: set[tuple[str, str]] = set()
+        self.counters: dict[str, float] = {
+            "fast_hits": 0, "base_reads": 0, "promotions": 0,
+            "demotions": 0, "evictions": 0, "writeback_puts": 0,
+            "writethrough_puts": 0, "room_demotions": 0,
+        }
+
+    # ---- residency helpers ------------------------------------------------
+    @property
+    def fast(self) -> ObjectBackend:
+        return self.tiers[0]
+
+    @property
+    def base(self) -> ObjectBackend:
+        return self.tiers[-1]
+
+    def tier_of(self, bucket: str, key: str) -> ObjectBackend | None:
+        for t in self.tiers:
+            if t.exists(bucket, key):
+                return t
+        return None
+
+    def _touch(self, bucket: str, key: str, t: float) -> int:
+        h = self._heat.setdefault((bucket, key), [0, t])
+        h[0] += 1
+        h[1] = max(h[1], t)
+        return h[0]
+
+    def _forget(self, bucket: str, key: str) -> None:
+        self._heat.pop((bucket, key), None)
+        self._tier_dirty.discard((bucket, key))
+
+    # ---- dirty-durability + capacity machinery ---------------------------
+    def _demote(self, bucket: str, key: str, start: float) -> float:
+        """Copy a fast-tier key down to the durable base (if tier-dirty),
+        then drop the cache copy.  The durable put charges the base lane;
+        the cache drop is a metadata-only eviction."""
+        data = self.fast._objects.get((bucket, key))
+        if data is None:
+            return start
+        t = start
+        if (bucket, key) in self._tier_dirty:
+            t = self.base.put_object(bucket, key, data, start=t)
+            self._tier_dirty.discard((bucket, key))
+            self.counters["demotions"] += 1
+        else:
+            self.counters["evictions"] += 1
+        if hasattr(self.fast, "evict"):
+            self.fast.evict(bucket, key)
+        else:  # pragma: no cover - cache tiers are NvmeStore in practice
+            self.fast._objects.pop((bucket, key), None)
+        return t
+
+    def _fast_residents(self) -> list[tuple[tuple, int]]:
+        """Fast-tier residency as ((bucket, key), size), eviction-ordered:
+        coldest first, then largest — the flusher's priority rule."""
+        rows = [((b, k), len(v)) for (b, k), v in self.fast._objects.items()]
+        rows.sort(key=lambda r: eviction_priority(
+            self._heat.get(r[0], [0, 0.0])[1], r[1], r[0]))
+        return rows
+
+    def _make_room(self, nbytes: int, start: float) -> tuple[bool, float]:
+        """Demote/evict coldest-first until `nbytes` fit in the fast tier.
+        Dirty keys are demoted (durable put charged), clean ones evicted
+        free.  Returns (room_made, t)."""
+        free = self.fast.free_bytes()
+        if free is None or free >= nbytes:
+            return True, start
+        cap = self.fast.profile.capacity_bytes
+        if cap is not None and nbytes > cap:
+            return False, start  # larger than the whole tier
+        t = start
+        for (bucket, key), _size in self._fast_residents():
+            if (self.fast.free_bytes() or 0) >= nbytes:
+                break
+            was_dirty = (bucket, key) in self._tier_dirty
+            t = self._demote(bucket, key, t)
+            if was_dirty:
+                self.counters["room_demotions"] += 1
+        return (self.fast.free_bytes() or 0) >= nbytes, t
+
+    def under_pressure(self) -> bool:
+        cap = self.fast.profile.capacity_bytes
+        return cap is not None and \
+            self.fast.used_bytes() > self.policy.demote_hiwater * cap
+
+    def maintain(self, start: float) -> tuple[int, float]:
+        """Capacity-pressure pass, driven by the flusher's tick: when the
+        fast tier sits above `demote_hiwater`, demote/evict coldest-first
+        down to `demote_lowater`.  Returns (keys_moved, t_end)."""
+        cap = self.fast.profile.capacity_bytes
+        if cap is None or not self.under_pressure():
+            return 0, start
+        target = self.policy.demote_lowater * cap
+        t = start
+        moved = 0
+        for (bucket, key), _size in self._fast_residents():
+            if self.fast.used_bytes() <= target:
+                break
+            t = self._demote(bucket, key, t)
+            moved += 1
+        return moved, t
+
+    def flush_cache(self, start: float) -> float:
+        """Demote every fast-tier resident (used by scale-to-zero and the
+        cold-read benchmarks): afterwards the durable base holds all data
+        and the fast tier is empty."""
+        t = start
+        for (bucket, key), _size in self._fast_residents():
+            t = self._demote(bucket, key, t)
+        return t
+
+    # ---- data plane (the CosStore surface) -------------------------------
+    def put_object(self, bucket: str, key: str, data: bytes,
+                   start: float | None = None) -> float:
+        t0 = self.clock.now if start is None else start
+        if self.policy.writeback:
+            ok, t0 = self._make_room(len(data), t0)
+            if ok:
+                try:
+                    end = self.fast.put_object(bucket, key, data, start=t0)
+                except CosCapacityError:  # raced accounting; fall through
+                    ok = False
+                else:
+                    self._tier_dirty.add((bucket, key))
+                    self._heat.setdefault((bucket, key), [0, end])[1] = end
+                    self.counters["writeback_puts"] += 1
+                    # a stale base copy stays masked by fastest-first reads
+                    return end
+        # write-through (policy, or object larger than the cache tier)
+        end = self.base.put_object(bucket, key, data, start=t0)
+        self._tier_dirty.discard((bucket, key))
+        if hasattr(self.fast, "evict"):
+            self.fast.evict(bucket, key)  # never serve a stale cache copy
+        self.counters["writethrough_puts"] += 1
+        return end
+
+    def get_object(self, bucket: str, key: str,
+                   rng: tuple[int, int] | None = None,
+                   start: float | None = None) -> tuple[bytes, float]:
+        t0 = self.clock.now if start is None else start
+        tier = self.tier_of(bucket, key)
+        if tier is None:
+            raise CosError(f"NoSuchKey: {self.name}://{bucket}/{key}")
+        data, end = tier.get_object(bucket, key, rng=rng, start=t0)
+        hits = self._touch(bucket, key, end)
+        if tier is self.fast:
+            self.counters["fast_hits"] += 1
+            return data, end
+        self.counters["base_reads"] += 1
+        if hits >= self.policy.promote_min_hits:
+            self._promote(bucket, key, end)
+        return data, end
+
+    def _promote(self, bucket: str, key: str, t: float) -> None:
+        """Fill the fast tier with a hot lower-tier object.  The fill is
+        asynchronous: it charges the fast lane starting at the read's end
+        but never extends the read itself.  Room is made by evicting clean
+        cold keys only — promotion must not force dirty demotions."""
+        full = self.base._objects.get((bucket, key))
+        if full is None or self.fast.exists(bucket, key):
+            return
+        free = self.fast.free_bytes()
+        if free is not None and free < len(full):
+            # clean-only room: evict cold clean residents, skip dirty ones
+            need = len(full)
+            for (b2, k2), _size in self._fast_residents():
+                if (self.fast.free_bytes() or 0) >= need:
+                    break
+                if (b2, k2) in self._tier_dirty:
+                    continue
+                self._demote(b2, k2, t)
+            if (self.fast.free_bytes() or 0) < need:
+                return  # tier full of dirty data; the flusher will drain it
+        try:
+            self.fast.put_object(bucket, key, full, start=t)
+        except CosError:
+            return
+        self.counters["promotions"] += 1
+
+    def head_object(self, bucket: str, key: str,
+                    start: float | None = None) -> tuple[int, float]:
+        t0 = self.clock.now if start is None else start
+        tier = self.tier_of(bucket, key)
+        if tier is None:
+            raise CosError(f"NoSuchKey: {self.name}://{bucket}/{key}")
+        return tier.head_object(bucket, key, start=t0)
+
+    def exists(self, bucket: str, key: str) -> bool:
+        return any(t.exists(bucket, key) for t in self.tiers)
+
+    def list_prefix(self, bucket: str, prefix: str, delimiter: str = "/",
+                    start: float | None = None
+                    ) -> tuple[list[tuple[str, int]], list[str], float]:
+        """Union listing: the durable base is authoritative (and charges
+        the request), cache tiers contribute residents not yet demoted."""
+        t0 = self.clock.now if start is None else start
+        objs, prefixes, end = self.base.list_prefix(bucket, prefix,
+                                                    delimiter, start=t0)
+        merged = dict(objs)
+        pfx = set(prefixes)
+        for tier in self.tiers[:-1]:
+            o2, p2, _ = tier.list_prefix(bucket, prefix, delimiter, start=t0)
+            tier.ops["list_prefix"] -= 1  # piggybacked on the base listing
+            merged.update(dict(o2))
+            pfx.update(p2)
+        return sorted(merged.items()), sorted(pfx), end
+
+    def delete_object(self, bucket: str, key: str,
+                      start: float | None = None) -> float:
+        t0 = self.clock.now if start is None else start
+        end = self.base.delete_object(bucket, key, start=t0)
+        for tier in self.tiers[:-1]:
+            if hasattr(tier, "evict"):
+                tier.evict(bucket, key)
+            else:  # pragma: no cover
+                tier._objects.pop((bucket, key), None)
+        self._forget(bucket, key)
+        return end
+
+    # ---- MPU: bulk uploads go straight to the durable base ---------------
+    def mpu_begin(self, bucket: str, key: str,
+                  start: float | None = None) -> tuple[str, float]:
+        return self.base.mpu_begin(bucket, key, start=start)
+
+    def mpu_add(self, upload_id: str, part_no: int, data: bytes,
+                start: float | None = None) -> float:
+        return self.base.mpu_add(upload_id, part_no, data, start=start)
+
+    def mpu_commit(self, upload_id: str,
+                   start: float | None = None) -> float:
+        mpu = self.base._mpus.get(upload_id)
+        end = self.base.mpu_commit(upload_id, start=start)
+        if mpu is not None:
+            # the durable copy is now newest: never serve a stale cache copy
+            for tier in self.tiers[:-1]:
+                if hasattr(tier, "evict"):
+                    tier.evict(mpu.bucket, mpu.key)
+            self._tier_dirty.discard((mpu.bucket, mpu.key))
+        return end
+
+    def mpu_abort(self, upload_id: str, start: float | None = None) -> float:
+        return self.base.mpu_abort(upload_id, start=start)
+
+    def outstanding_mpus(self) -> list[str]:
+        return self.base.outstanding_mpus()
+
+    # ---- failure injection / stats ---------------------------------------
+    def fail_next(self, op: str) -> None:
+        """Forward to the durable base — the tier the persisting
+        transaction talks to (tests target cache tiers directly)."""
+        self.base.fail_next(op)
+
+    def tier_dirty_bytes(self) -> int:
+        return sum(len(self.fast._objects.get(k, b""))
+                   for k in self._tier_dirty)
+
+    def stats(self) -> dict[str, float]:
+        out = dict(self.counters)
+        out["fast_used_bytes"] = self.fast.used_bytes()
+        out["tier_dirty_bytes"] = self.tier_dirty_bytes()
+        out["tier_dirty_keys"] = len(self._tier_dirty)
+        return out

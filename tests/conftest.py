@@ -28,9 +28,11 @@ def workdir():
     shutil.rmtree(d, ignore_errors=True)
 
 
-def make_cluster(workdir, n=3, chunk=CHUNK, buckets=None, hw=None, cfg=None):
+def make_cluster(workdir, n=3, chunk=CHUNK, buckets=None, hw=None, cfg=None,
+                 backends=None, clock=None):
     cfg = cfg or ServerConfig(chunk_size=chunk)
-    cl = Cluster(workdir, buckets or [BucketMount("b", "b")], hw=hw, cfg=cfg)
+    cl = Cluster(workdir, buckets or [BucketMount("b", "b")], hw=hw, cfg=cfg,
+                 backends=backends, clock=clock)
     cl.start(n)
     return cl
 

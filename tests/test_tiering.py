@@ -1,0 +1,322 @@
+"""Pluggable storage backends + capacity-aware tiering (PR 10): profile
+timing determinism, failure-profile retry schedules, coldest-first demotion
+under capacity pressure, the dirty-durability-before-eviction invariant,
+and metamorphic single-backend equivalence with the pre-tiering store."""
+
+import numpy as np
+import pytest
+
+from repro.core import (BackendProfile, BucketMount, CosCapacityError,
+                        CosError, CosStore, CosThrottleError, GcsStore,
+                        HardwareModel, NvmeStore, SimClock, TierPolicy,
+                        TieredStore, eviction_priority, fs_fingerprint)
+from conftest import CHUNK, make_cluster, make_fs
+
+
+def _blob(n, seed=0):
+    return bytes(np.random.default_rng(seed).integers(0, 256, size=n,
+                                                      dtype=np.uint8))
+
+
+def _tier(clock, nvme_cap=4 << 20, policy=None):
+    return TieredStore([NvmeStore(clock, capacity_bytes=nvme_cap),
+                        CosStore(clock, HardwareModel())], clock, policy)
+
+
+# ---------------------------------------------------------------------------
+# backend profiles: timing determinism + failure envelopes
+# ---------------------------------------------------------------------------
+
+def test_backend_profiles_are_deterministic_and_distinct():
+    """The same op sequence yields identical virtual end times on two
+    identically-configured backends, and the three stock profiles order as
+    expected (NVMe ≪ S3-like < GCS-like first-byte latency)."""
+    def run_ops(be):
+        ends = [be.put_object("b", f"k{i}", _blob(64 << 10, i), start=0.0)
+                for i in range(4)]
+        for i in range(4):
+            _, e = be.get_object("b", f"k{i}", start=max(ends))
+            ends.append(e)
+        return ends
+
+    a, b = CosStore(SimClock()), CosStore(SimClock())
+    assert run_ops(a) == run_ops(b)
+
+    ends = {}
+    for cls in (CosStore, GcsStore, NvmeStore):
+        be = cls(SimClock())
+        ends[cls.__name__] = be.put_object("b", "k", _blob(256 << 10), start=0.0)
+    assert ends["NvmeStore"] < ends["CosStore"]
+    # GCS profile: higher first-byte latency + slow-start on early transfers
+    assert ends["CosStore"] < ends["GcsStore"]
+
+
+def test_gcs_slow_start_ramp_then_steady_state():
+    gcs = GcsStore(SimClock())
+    n = gcs.profile.slow_start_ops
+    data = _blob(1 << 20)
+    cold = [gcs.put_object("b", f"c{i}", data, start=float(i * 10))
+            - i * 10 for i in range(n)]
+    warm = gcs.put_object("b", "w", data, start=1e4) - 1e4
+    assert all(c > warm for c in cold)
+    assert gcs.stats["slow_starts"] == n
+
+
+def test_throttle_every_retries_internally_then_surfaces():
+    """With a retry budget the Nth request succeeds later (latency +
+    backoff charged); with no budget it raises CosThrottleError."""
+    p = BackendProfile(name="cos", throttle_every=3, max_retries=2)
+    be = CosStore(SimClock(), profile=p)
+    data = _blob(1 << 10)
+    e1 = be.put_object("b", "k1", data, start=0.0)
+    e2 = be.put_object("b", "k2", data, start=0.0)
+    e3 = be.put_object("b", "k3", data, start=0.0)  # throttled + retried
+    assert e3 == pytest.approx(
+        e1 + p.latency_s + p.retry_backoff_s), "retry charges one RTT+backoff"
+    assert e2 < e3
+    assert be.stats["throttles"] == 1 and be.stats["retries"] == 1
+
+    hard = CosStore(SimClock(),
+                    profile=BackendProfile(throttle_every=2, max_retries=0))
+    hard.put_object("b", "k1", data, start=0.0)
+    with pytest.raises(CosThrottleError):
+        hard.put_object("b", "k2", data, start=0.0)
+
+
+def test_fail_next_is_one_shot():
+    be = CosStore(SimClock())
+    be.fail_next("put_object")
+    with pytest.raises(CosError):
+        be.put_object("b", "k", b"x", start=0.0)
+    be.put_object("b", "k", b"x", start=0.0)  # next attempt succeeds
+
+
+def test_nvme_capacity_rejects_before_mutating():
+    nv = NvmeStore(SimClock(), capacity_bytes=1 << 20)
+    nv.put_object("b", "a", _blob(768 << 10), start=0.0)
+    with pytest.raises(CosCapacityError):
+        nv.put_object("b", "big", _blob(512 << 10), start=0.0)
+    assert nv.object_count() == 1 and not nv.exists("b", "big")
+    # replacing an existing key only charges the delta
+    nv.put_object("b", "a", _blob(1 << 20), start=0.0)
+    assert nv.used_bytes() == 1 << 20
+
+
+def test_put_limit_forces_mpu():
+    be = CosStore(SimClock(),
+                  profile=BackendProfile(put_limit_bytes=1 << 20))
+    with pytest.raises(CosError):
+        be.put_object("b", "big", _blob(2 << 20), start=0.0)
+    uid, t = be.mpu_begin("b", "big", start=0.0)
+    t = be.mpu_add(uid, 1, _blob(1 << 20), start=t)
+    t = be.mpu_add(uid, 2, _blob(1 << 20, 1), start=t)
+    be.mpu_commit(uid, start=t)
+    assert be.exists("b", "big")
+
+
+# ---------------------------------------------------------------------------
+# tiering policy: promotion, demotion order, dirty durability
+# ---------------------------------------------------------------------------
+
+def test_promotion_on_read_heat():
+    clock = SimClock()
+    tier = _tier(clock, nvme_cap=8 << 20)
+    tier.base.put_object("b", "hot", _blob(1 << 20), start=0.0)
+    _, e1 = tier.get_object("b", "hot", start=1.0)     # base read, heat 1
+    assert not tier.fast.exists("b", "hot")
+    _, e2 = tier.get_object("b", "hot", start=e1)      # heat 2 -> promote
+    assert tier.fast.exists("b", "hot")
+    assert tier.counters["promotions"] == 1
+    # the promotion fill is asynchronous: it must not extend the read
+    assert e2 - e1 == pytest.approx(e1 - 1.0)
+    _, e3 = tier.get_object("b", "hot", start=e2)      # NVMe hit
+    assert e3 - e2 < (e2 - e1) / 10
+    assert tier.counters["fast_hits"] == 1
+
+
+def test_demotion_is_coldest_first_down_to_lowater():
+    clock = SimClock()
+    pol = TierPolicy(demote_hiwater=0.80, demote_lowater=0.45)
+    tier = _tier(clock, nvme_cap=4 << 20, policy=pol)
+    # four 900 KiB write-back puts with strictly increasing heat timestamps
+    t = 0.0
+    for i in range(4):
+        t = tier.put_object("b", f"f{i}", _blob(900 << 10, i), start=t + 1.0)
+    assert tier.under_pressure()
+    moved, _ = tier.maintain(t)
+    # must demote the two oldest-touched keys to fall to <= 45% of 4 MiB
+    # (2 x 900 KiB residents = 43.9%)
+    assert moved == 2
+    assert not tier.fast.exists("b", "f0") and not tier.fast.exists("b", "f1")
+    assert tier.fast.exists("b", "f2") and tier.fast.exists("b", "f3")
+    # demoted keys are durable and still readable through the stack
+    for k in ("f0", "f1"):
+        assert tier.base.exists("b", k)
+    assert not tier.under_pressure()
+
+
+def test_eviction_priority_matches_flusher_rule():
+    rows = [("cold-small", eviction_priority(1.0, 10, "a")),
+            ("cold-big", eviction_priority(1.0, 99, "b")),
+            ("hot", eviction_priority(9.0, 1000, "c"))]
+    order = [name for name, key in sorted(rows, key=lambda r: r[1])]
+    assert order == ["cold-big", "cold-small", "hot"]
+
+
+def test_dirty_data_never_lost_on_eviction():
+    """The invariant: a tier-dirty key forced out of the NVMe tier (room
+    for a new put, watermark demotion, or flush_cache) is copied to the
+    durable base *first* — no sequence of capacity events loses bytes."""
+    clock = SimClock()
+    tier = _tier(clock, nvme_cap=2 << 20)
+    payloads = {f"f{i}": _blob(700 << 10, i) for i in range(6)}
+    t = 0.0
+    for k, v in payloads.items():       # 4.2 MB through a 2 MB tier
+        t = tier.put_object("b", k, v, start=t + 1.0)
+    assert tier.counters["room_demotions"] > 0
+    t = tier.flush_cache(t)
+    assert tier.tier_dirty_bytes() == 0
+    for k, v in payloads.items():
+        got, t = tier.get_object("b", k, start=t)
+        assert got == v
+        assert tier.base.exists("b", k)
+
+
+def test_promotion_never_forces_dirty_demotion():
+    """Room-making for a promotion only evicts *clean* residents: a tier
+    full of dirty data simply skips the promotion."""
+    clock = SimClock()
+    tier = _tier(clock, nvme_cap=2 << 20)
+    t = tier.put_object("b", "dirty", _blob(1800 << 10), start=0.0)
+    t = tier.base.put_object("b", "warm", _blob(512 << 10), start=t)
+    for _ in range(3):
+        _, t = tier.get_object("b", "warm", start=t)
+    assert not tier.fast.exists("b", "warm"), "promotion must be skipped"
+    assert tier.fast.exists("b", "dirty") and tier.tier_dirty_bytes() > 0
+
+
+def test_mpu_commit_invalidates_stale_cache_copy():
+    clock = SimClock()
+    tier = _tier(clock, nvme_cap=8 << 20)
+    t = tier.put_object("b", "k", _blob(256 << 10, 1), start=0.0)  # cached
+    assert tier.fast.exists("b", "k")
+    uid, t = tier.mpu_begin("b", "k", start=t)
+    t = tier.mpu_add(uid, 1, _blob(512 << 10, 2), start=t)
+    t = tier.mpu_commit(uid, start=t)
+    assert not tier.fast.exists("b", "k"), "stale cache copy must be dropped"
+    got, _ = tier.get_object("b", "k", start=t)
+    assert got == _blob(512 << 10, 2)
+
+
+def test_writethrough_policy_bypasses_cache_tier():
+    clock = SimClock()
+    tier = _tier(clock, policy=TierPolicy(writeback=False))
+    tier.put_object("b", "k", _blob(64 << 10), start=0.0)
+    assert tier.base.exists("b", "k") and not tier.fast.exists("b", "k")
+    assert tier.counters["writethrough_puts"] == 1
+    assert tier.tier_dirty_bytes() == 0
+
+
+# ---------------------------------------------------------------------------
+# cluster integration: bucket->backend binding end to end
+# ---------------------------------------------------------------------------
+
+def test_cluster_tiered_mount_end_to_end(workdir):
+    """Sub-chunk files through a tiered mount land tier-dirty on NVMe via
+    the PutObject fast path; scale-to-zero demotes every dirty byte; a new
+    cluster generation over the same backends reads everything back."""
+    clock = SimClock()
+    tier = _tier(clock, nvme_cap=32 << 20)
+    cl = make_cluster(workdir + "/gen1", n=3,
+                      buckets=[BucketMount("b", "b", backend="tiered")],
+                      backends={"tiered": tier}, clock=clock)
+    fs = make_fs(cl)
+    files = {}
+    for i in range(12):
+        p, d = f"/b/f{i}.bin", _blob(100 << 10, i)  # sub-chunk: fast path
+        fs.write_file(p, d)
+        files[p] = d
+    cl.drain_dirty(max_rounds=16)
+    assert tier.counters["writeback_puts"] > 0, \
+        "colocated sub-chunk persists must take the write-back fast path"
+    cl.scale_to_zero()
+    cl.close()
+    assert tier.tier_dirty_bytes() == 0
+    assert all(tier.base.exists("b", f"f{i}.bin") for i in range(12))
+
+    cl2 = make_cluster(workdir + "/gen2", n=2,
+                       buckets=[BucketMount("b", "b", backend="tiered")],
+                       backends={"tiered": tier}, clock=clock)
+    fs2 = make_fs(cl2)
+    for p, d in files.items():
+        assert fs2.read_file(p) == d
+    cl2.close()
+
+
+def test_flusher_tick_drives_tier_maintain(workdir):
+    """The background flusher's tick runs the capacity-pressure pass on
+    every registered backend with a `maintain` hook."""
+    clock = SimClock()
+    tier = _tier(clock, nvme_cap=2 << 20,
+                 policy=TierPolicy(demote_hiwater=0.5, demote_lowater=0.25))
+    cl = make_cluster(workdir, n=2,
+                      buckets=[BucketMount("b", "b", backend="tiered")],
+                      backends={"tiered": tier}, clock=clock)
+    t = 0.0
+    for i in range(3):
+        t = tier.put_object("b", f"k{i}", _blob(512 << 10, i), start=t + 1.0)
+    assert tier.under_pressure()
+    cl.tick_flush()
+    assert not tier.under_pressure()
+    assert cl.flusher.counters.get("tier_demotions", 0) > 0
+    assert "tier.tiered" in cl.dirty_counts()
+    cl.close()
+
+
+def test_unknown_backend_binding_rejected(workdir):
+    with pytest.raises(AssertionError):
+        make_cluster(workdir, n=1,
+                     buckets=[BucketMount("b", "b", backend="nope")])
+
+
+# ---------------------------------------------------------------------------
+# metamorphic: a single-backend binding reproduces the default store exactly
+# ---------------------------------------------------------------------------
+
+def _workload(cl):
+    fs = make_fs(cl)
+    fs.makedirs("/b/d")
+    for i in range(6):
+        sz = (64 << 10) if i % 2 else (CHUNK * 3)   # put + MPU paths
+        fs.write_file(f"/b/d/f{i}.bin", _blob(sz, i))
+    cl.drain_dirty(max_rounds=16)
+    for i in range(6):
+        fs.read_file(f"/b/d/f{i}.bin")
+    fs.listdir("/b/d")
+    return fs
+
+
+def test_single_backend_binding_is_fingerprint_identical(tmp_path):
+    """Binding the bucket to an explicitly-registered CosStore (instead of
+    the implicit default) must reproduce byte-identical filesystem state
+    AND identical virtual end times — the tiering seam adds nothing when
+    there is no tier stack."""
+    cl_a = make_cluster(str(tmp_path / "a"), n=3)
+    fp_a = fs_fingerprint(_workload(cl_a))
+    t_a = cl_a.clock.now
+    cos_a = cl_a.cos.ops.copy()
+    cl_a.close()
+
+    clock_b = SimClock()
+    explicit = CosStore(clock_b, HardwareModel())
+    cl_b = make_cluster(str(tmp_path / "b"), n=3,
+                        buckets=[BucketMount("b", "b", backend="s3b")],
+                        backends={"s3b": explicit}, clock=clock_b)
+    fp_b = fs_fingerprint(_workload(cl_b))
+    t_b = cl_b.clock.now
+    cl_b.close()
+
+    assert fp_a == fp_b
+    assert t_a == pytest.approx(t_b, abs=0.0), \
+        "explicit single-backend binding must not change virtual time"
+    assert cos_a == explicit.ops, "same COS op mix through either binding"
